@@ -1,0 +1,319 @@
+"""One function per paper table/figure (DynaComm, IEEE JSAC 2021).
+
+Every function returns a list of row-dicts; ``benchmarks.run`` prints them
+as CSV and EXPERIMENTS.md §Faithful quotes the numbers next to the paper's.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.edge_setup import cnn_costs, edge_network
+from repro.core import (STRATEGIES, backward_time, dp_backward, dp_forward,
+                        evaluate, forward_time, ibatch_backward,
+                        ibatch_forward, random_costs, schedule,
+                        simulate_iteration)
+from repro.core.baselines import (lbl_backward, lbl_forward,
+                                  sequential_backward, sequential_forward)
+
+MODELS = ("vgg19", "googlenet", "inception-v4", "resnet152")
+LAYERWISE = ("lbl", "ibatch", "dynacomm")
+
+
+def _phase_rows(batch: int, phase: str) -> List[Dict]:
+    rows = []
+    for model in MODELS:
+        costs = cnn_costs(model, batch=batch)
+        L = costs.num_layers
+        seq = (forward_time(costs, sequential_forward(L)) if phase == "fwd"
+               else backward_time(costs, sequential_backward(L)))
+        for strat in ("sequential",) + LAYERWISE:
+            f, b = schedule(costs, strat)
+            t = forward_time(costs, f) if phase == "fwd" \
+                else backward_time(costs, b)
+            rows.append({
+                "model": model, "strategy": strat, "phase": phase,
+                "batch": batch, "time_s": round(t, 4),
+                "normalized": round(t / seq, 4),
+                "reduced_pct": round(100 * (1 - t / seq), 2),
+            })
+    return rows
+
+
+def fig5_forward_bs32() -> List[Dict]:
+    """Fig. 5: normalized forward execution time, batch 32."""
+    return _phase_rows(32, "fwd")
+
+
+def fig6_backward_bs32() -> List[Dict]:
+    """Fig. 6: normalized backward execution time, batch 32."""
+    return _phase_rows(32, "bwd")
+
+
+def fig7_forward_bs16() -> List[Dict]:
+    """Fig. 7: batch 16 forward."""
+    return _phase_rows(16, "fwd")
+
+
+def fig8_backward_bs16() -> List[Dict]:
+    """Fig. 8: batch 16 backward."""
+    return _phase_rows(16, "bwd")
+
+
+def total_iteration_reduction() -> List[Dict]:
+    """Paper text: total iteration-time reduction per model (bs 32 & 16)."""
+    rows = []
+    for batch in (32, 16):
+        for model in MODELS:
+            costs = cnn_costs(model, batch=batch)
+            res = {s: evaluate(costs, schedule(costs, s))["total"]
+                   for s in ("sequential", "lbl", "ibatch", "dynacomm")}
+            rows.append({
+                "model": model, "batch": batch,
+                **{f"{s}_s": round(v, 3) for s, v in res.items()},
+                "dynacomm_reduced_pct":
+                    round(100 * (1 - res["dynacomm"] / res["sequential"]), 2),
+            })
+    return rows
+
+
+def fig9a_batch_sensitivity() -> List[Dict]:
+    """Fig. 9(a): iteration time reduced ratio vs batch size (ResNet-152)."""
+    rows = []
+    for batch in (8, 16, 24, 32, 48, 64):
+        costs = cnn_costs("resnet152", batch=batch)
+        seq = evaluate(costs, schedule(costs, "sequential"))["total"]
+        for strat in LAYERWISE:
+            t = evaluate(costs, schedule(costs, strat))["total"]
+            rows.append({"batch": batch, "strategy": strat,
+                         "reduced_pct": round(100 * (1 - t / seq), 2)})
+    return rows
+
+
+def fig9b_bandwidth_sensitivity() -> List[Dict]:
+    """Fig. 9(b): reduction vs bandwidth (ResNet-152, batch 32)."""
+    rows = []
+    base = cnn_costs("resnet152", batch=32)   # 8 workers sharing the fabric
+    for gbps in (1, 5, 10):
+        costs = base.scaled(comm=10.0 / gbps)
+        seq = evaluate(costs, schedule(costs, "sequential"))["total"]
+        for strat in LAYERWISE:
+            t = evaluate(costs, schedule(costs, strat))["total"]
+            rows.append({"bandwidth_gbps": gbps, "strategy": strat,
+                         "reduced_pct": round(100 * (1 - t / seq), 2)})
+    return rows
+
+
+def fig11_scalability() -> List[Dict]:
+    """Fig. 11: speedup vs #workers (ResNet-152; server bandwidth shared)."""
+    rows = []
+    t1 = {}
+    for workers in (1, 2, 4, 8):
+        costs = cnn_costs("resnet152", batch=32, workers=workers)
+        for strat in ("sequential",) + LAYERWISE:
+            t = evaluate(costs, schedule(costs, strat))["total"]
+            if workers == 1:
+                t1[strat] = t
+            rows.append({"workers": workers, "strategy": strat,
+                         "iter_s": round(t, 3),
+                         "speedup": round(workers * t1[strat] / t, 2)})
+    return rows
+
+
+def fig12_scheduling_complexity() -> List[Dict]:
+    """Fig. 12: scheduling overhead vs number of layers (random profiles)."""
+    rows = []
+    for L in (20, 40, 80, 160, 320):
+        costs = random_costs(L, seed=0, dt=5e-3)
+        for name, fn in (
+            ("dynacomm_fwd", lambda: dp_forward(costs)),
+            ("dynacomm_bwd", lambda: dp_backward(costs)),
+            ("ibatch_fwd", lambda: ibatch_forward(costs)),
+            ("ibatch_bwd", lambda: ibatch_backward(costs)),
+        ):
+            t0 = time.perf_counter()
+            fn()
+            dt = time.perf_counter() - t0
+            rows.append({"L": L, "scheduler": name,
+                         "seconds": round(dt, 5)})
+    return rows
+
+
+def table1_scheduling_overhead() -> List[Dict]:
+    """Table I: per-model scheduling cost vs the idle window (Δt + gt¹/pt¹)."""
+    rows = []
+    for model in MODELS:
+        costs = cnn_costs(model, batch=32)
+        samples_f, samples_b = [], []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            dp_forward(costs)
+            samples_f.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            dp_backward(costs)
+            samples_b.append(time.perf_counter() - t0)
+        window_f = costs.dt + float(costs.gt[0])    # Δt + gt_i^1
+        window_b = costs.dt + float(costs.pt[0])    # Δt + pt_{i+1}^1
+        rows.append({
+            "model": model, "L": costs.num_layers,
+            "dynacomm_fwd_ms": round(1e3 * float(np.mean(samples_f)), 3),
+            "dynacomm_bwd_ms": round(1e3 * float(np.mean(samples_b)), 3),
+            "idle_window_fwd_ms": round(1e3 * window_f, 2),
+            "idle_window_bwd_ms": round(1e3 * window_b, 2),
+            "hidden": bool(np.mean(samples_f) < window_f
+                           and np.mean(samples_b) < window_b),
+        })
+    return rows
+
+
+def breakdown_rows() -> List[Dict]:
+    """Stacked-bar decomposition behind Figs. 5-8 (overlap accounting)."""
+    rows = []
+    for model in MODELS:
+        costs = cnn_costs(model, batch=32)
+        for strat in ("sequential", "lbl", "ibatch", "dynacomm"):
+            f, b = schedule(costs, strat)
+            tl = simulate_iteration(costs, f, b)
+            for phase in ("forward", "backward"):
+                br = tl.breakdown(phase)
+                rows.append({
+                    "model": model, "strategy": strat, "phase": phase,
+                    "total_s": round(br.total, 4),
+                    "comp_only_s": round(br.comp_only, 4),
+                    "overlap_s": round(br.overlap, 4),
+                    "comm_only_s": round(br.comm_only, 4),
+                })
+    return rows
+
+
+def fig10_accuracy_untouched() -> List[Dict]:
+    """Fig. 10: train the CIFAR CNN under different schedules — since the
+    schedule only moves bytes, losses must be IDENTICAL (here: the same
+    jitted math, decision recorded alongside; the multi-device bucketed
+    trainer's bit-exactness is asserted in tests/test_dist.py)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.data.pipeline import SyntheticCIFAR
+    from repro.models.cnn import small_cnn_init, small_cnn_loss
+    from repro.optim import sgd
+
+    rows = []
+    curves = {}
+    for strat in ("sequential", "dynacomm"):
+        params = small_cnn_init(jax.random.PRNGKey(0))
+        opt = sgd(0.05, momentum=0.9)
+        state = opt.init(params)
+        pipe = SyntheticCIFAR(batch_size=32, seed=0)
+
+        @jax.jit
+        def step(params, state, images, labels):
+            loss, grads = jax.value_and_grad(small_cnn_loss)(
+                params, images, labels)
+            params, state = opt.update(grads, state, params)
+            return params, state, loss
+
+        losses = []
+        for i in range(30):
+            b = pipe.batch(i)
+            params, state, loss = step(params, state, b["images"],
+                                       b["labels"])
+            losses.append(float(loss))
+        curves[strat] = losses
+        rows.append({"strategy": strat, "first_loss": round(losses[0], 6),
+                     "last_loss": round(losses[-1], 6)})
+    rows.append({"strategy": "identical",
+                 "value": curves["sequential"] == curves["dynacomm"]})
+    return rows
+
+
+def table2_profiling_overhead() -> List[Dict]:
+    """Table II: local training speed with the profiling switch on/off.
+
+    Profiling = timing each layer's jitted fwd/bwd callables (the paper's
+    mxnet.profiler analogue) once per epoch; overhead is the profiling
+    wall time amortized over the epoch's iterations."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.profiler import time_callable
+    from repro.data.pipeline import SyntheticText
+    from repro.models import init_params, train_loss
+    from repro.optim import adamw
+
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    state = opt.init(params)
+    pipe = SyntheticText(cfg.vocab_size, 64, 8, seed=0)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(cfg, p, batch))(params)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    batch = pipe.batch(0)
+    step(params, state, batch)  # compile
+    t_iter = time_callable(lambda: step(params, state, batch), iters=5)
+
+    # "profiler on": per-layer fwd timing pass (once per 195-iter epoch)
+    from repro.models.blocks import apply_block
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model))
+    fns = [jax.jit(lambda p, h, k=kind: apply_block(p, h, cfg, k,
+                                                    mode="train")[0])
+           for kind in cfg.layer_kinds()]
+    import time as _t
+    t0 = _t.perf_counter()
+    for fn, p in zip(fns, params["layers"]):
+        time_callable(fn, p, x, iters=3, warmup=1)
+    t_profile = _t.perf_counter() - t0
+    per_iter_overhead = t_profile / 195.0
+    return [{
+        "iter_s_profiler_off": round(t_iter, 4),
+        "iter_s_profiler_on": round(t_iter + per_iter_overhead, 4),
+        "overhead_pct": round(100 * per_iter_overhead / t_iter, 3),
+    }]
+
+
+def dt_regime_ablation() -> List[Dict]:
+    """Beyond-paper: how the optimal decomposition granularity tracks Δt.
+
+    Sweeps Δt from ICI-scale (10 µs) to edge-scale (100 ms) on the
+    ResNet-152 cost table: DynaComm's bucket count collapses from
+    layer-by-layer toward sequential while staying optimal throughout —
+    the single-algorithm-both-regimes property (paper Section VI, here
+    quantified)."""
+    rows = []
+    base = cnn_costs("resnet152", batch=32)
+    for regime, comm in (("compute-heavy", 1.0), ("comm-heavy", 4.0)):
+        for dt in (1e-5, 1e-4, 1e-3, 1e-2, 1e-1):
+            costs = base.scaled(comm=comm, dt=dt)
+            for strat in ("lbl", "ibatch", "dynacomm"):
+                f, b = schedule(costs, strat)
+                t = evaluate(costs, (f, b))["total"]
+                rows.append({"regime": regime, "dt_s": dt, "strategy": strat,
+                             "fwd_buckets": len(f), "bwd_buckets": len(b),
+                             "iter_s": round(t, 4)})
+    return rows
+
+
+ALL_BENCHES = {
+    "fig5_forward_bs32": fig5_forward_bs32,
+    "fig6_backward_bs32": fig6_backward_bs32,
+    "fig7_forward_bs16": fig7_forward_bs16,
+    "fig8_backward_bs16": fig8_backward_bs16,
+    "total_iteration_reduction": total_iteration_reduction,
+    "fig9a_batch_sensitivity": fig9a_batch_sensitivity,
+    "fig9b_bandwidth_sensitivity": fig9b_bandwidth_sensitivity,
+    "fig11_scalability": fig11_scalability,
+    "fig12_scheduling_complexity": fig12_scheduling_complexity,
+    "table1_scheduling_overhead": table1_scheduling_overhead,
+    "table2_profiling_overhead": table2_profiling_overhead,
+    "fig10_accuracy_untouched": fig10_accuracy_untouched,
+    "breakdown": breakdown_rows,
+    "dt_regime_ablation": dt_regime_ablation,
+}

@@ -1,0 +1,47 @@
+"""Benchmark harness: one function per paper table/figure + roofline table.
+
+``python -m benchmarks.run`` prints, per bench, a CSV block
+(``name,us_per_call,derived``-style: each row carries the bench name, the
+wall time of producing it, and the derived metrics as key=value pairs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _print_block(name: str, rows, elapsed_s: float) -> None:
+    us = 1e6 * elapsed_s / max(len(rows), 1)
+    for row in rows:
+        derived = ";".join(f"{k}={v}" for k, v in row.items())
+        print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by name")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks.paper_figures import ALL_BENCHES
+    benches = dict(ALL_BENCHES)
+
+    if not args.skip_roofline:
+        from benchmarks.roofline_report import roofline_rows
+        benches["roofline_single_pod"] = \
+            lambda: roofline_rows("dryrun_single_pod.jsonl")
+        benches["roofline_multi_pod"] = \
+            lambda: roofline_rows("dryrun_multi_pod.jsonl")
+
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        _print_block(name, rows, time.perf_counter() - t0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+# Ensures `import benchmarks` works from pytest (adds repo root to sys.path).

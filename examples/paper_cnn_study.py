@@ -1,0 +1,39 @@
+"""Reproduce the paper's CNN case study from the command line.
+
+Prints the per-strategy normalized execution times for any of the paper's
+four models under the calibrated edge testbed, plus the chosen decisions.
+
+    PYTHONPATH=src:. python examples/paper_cnn_study.py --model resnet152
+"""
+
+import argparse
+
+from benchmarks.edge_setup import cnn_costs
+from repro.core import evaluate, schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="resnet152",
+                    choices=["vgg19", "googlenet", "inception-v4",
+                             "resnet152"])
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    costs = cnn_costs(args.model, batch=args.batch)
+    print(f"{args.model} (batch {args.batch}): L={costs.num_layers}, "
+          f"Δt={costs.dt * 1e3:.1f} ms")
+    seq = None
+    for strategy in ("sequential", "lbl", "ibatch", "dynacomm"):
+        decision = schedule(costs, strategy)
+        t = evaluate(costs, decision)
+        seq = seq or t["total"]
+        fwd, bwd = decision
+        print(f"  {strategy:10s} iter {t['total']:7.3f}s "
+              f"(normalized {t['total'] / seq:.3f}, "
+              f"reduced {100 * (1 - t['total'] / seq):5.2f}%)  "
+              f"buckets fwd={len(fwd)} bwd={len(bwd)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Flat-path npz checkpointing for arbitrary pytrees (params + opt state).
+
+No external deps: pytree leaves are stored under their joined key path;
+restore rebuilds into a caller-provided template tree (shape/dtype checked),
+so sharded restores can re-place leaves per device after load.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int | None = None) -> None:
+    flat = _flatten_with_paths(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_checkpoint(path: str, template: Any):
+    """Returns (tree_like_template, step_or_None)."""
+    data = np.load(path)
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t[0]:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    step = int(data["__step__"]) if "__step__" in data else None
+    return jax.tree_util.tree_unflatten(flat_t[1], leaves), step

@@ -1,0 +1,142 @@
+"""DynaComm's DP-based scheduling algorithms (paper Algorithms 3 and 4).
+
+Forward Bellman equation (paper eq. 13)::
+
+    F[m][n] = min_{0<=k<m} { max(F[k][n-1], n*Δt + Σ_{1<=l<=m} pt_l)
+                             + Σ_{k+1<=l<=m} fc_l }          1<=n<=m<=L
+
+``F[m][n]`` is the earliest completion time of the first ``m`` layers'
+forward compute given ``n`` transmission mini-procedures cover their
+parameters.  The n-th transmission ends at ``n*Δt + Σ pt_{1..m}`` because
+transmissions are serialized back-to-back on the link.
+
+Backward Bellman equation (paper eq. 14)::
+
+    B[m][n] = min_{0<=k<m} { max(B[k][n-1], Σ_{L-m+1<=l<=L} bc_l)
+                             + Δt + Σ_{L-m+1<=l<=L-k} gt_l }  1<=n<=m<=L
+
+``B[m][n]`` is the earliest completion time of the *gradient transmissions*
+of the last ``m`` layers using ``n`` mini-procedures; backward compute runs
+stall-free from layer L downwards.
+
+Both run in O(L^3) time / O(L^2) space (paper Section IV-B4).  The inner
+minimization is vectorized with numpy so the Fig. 12 complexity benchmark is
+tractable at hundreds of layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.costmodel import (LayerCosts, Segment, backward_time,
+                                  forward_time)
+
+_INF = np.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class DPResult:
+    segments: Tuple[Segment, ...]
+    time: float                  # optimal phase time (== f_m of segments)
+    table: np.ndarray            # F or B, shape (L+1, L+1)
+    num_transmissions: int
+
+
+def _traceback(path: np.ndarray, L: int, n_star: int) -> Tuple[int, ...]:
+    """Recover the k-chain 0 = k_0 < k_1 < ... < k_{n*} = L from Path."""
+    bounds = [L]
+    m, n = L, n_star
+    while n > 0:
+        k = int(path[m, n])
+        if k < 0:
+            raise RuntimeError("broken DP path")
+        bounds.append(k)
+        m, n = k, n - 1
+    if bounds[-1] != 0:
+        raise RuntimeError("DP path did not terminate at 0")
+    return tuple(reversed(bounds))
+
+
+def dp_forward(costs: LayerCosts) -> DPResult:
+    """Algorithm 3 — optimal parameter-transmission segmentation."""
+    L = costs.num_layers
+    pt_pref = np.concatenate([[0.0], np.cumsum(costs.pt)])   # Σ pt_{1..m}
+    fc_pref = np.concatenate([[0.0], np.cumsum(costs.fc)])   # Σ fc_{1..m}
+
+    F = np.full((L + 1, L + 1), _INF)
+    path = np.full((L + 1, L + 1), -1, dtype=np.int64)
+    F[0, 0] = 0.0
+
+    ms = np.arange(L + 1)
+    for n in range(1, L + 1):
+        prev = F[:, n - 1]                       # F[k][n-1], k = 0..L
+        # arrive[m]: when the n-th transmission (ending at layer m) completes
+        arrive = n * costs.dt + pt_pref
+        # cand[m, k] = max(prev[k], arrive[m]) + (fc_pref[m] - fc_pref[k])
+        cand = np.maximum(prev[None, :], arrive[:, None]) \
+            + fc_pref[:, None] - fc_pref[None, :]
+        cand[ms[:, None] <= ms[None, :]] = _INF  # require k < m
+        ks = np.argmin(cand, axis=1)
+        vals = cand[ms, ks]
+        valid = ms >= n
+        F[valid, n] = vals[valid]
+        path[valid, n] = ks[valid]
+
+    n_star = int(np.argmin(F[L, 1:]) + 1)
+    t_star = float(F[L, n_star])
+    bounds = _traceback(path, L, n_star)
+    segments = tuple((bounds[i] + 1, bounds[i + 1]) for i in range(len(bounds) - 1))
+    # Sanity: the DP objective must equal the O(L) cost function.
+    assert abs(forward_time(costs, segments) - t_star) <= 1e-9 * max(1.0, t_star)
+    return DPResult(segments=segments, time=t_star, table=F,
+                    num_transmissions=n_star)
+
+
+def dp_backward(costs: LayerCosts) -> DPResult:
+    """Algorithm 4 — optimal gradient-transmission segmentation."""
+    L = costs.num_layers
+    # Reversed views: position j (1-indexed) = original layer L+1-j.
+    bc_rev = costs.bc[::-1]
+    gt_rev = costs.gt[::-1]
+    bc_pref = np.concatenate([[0.0], np.cumsum(bc_rev)])     # Σ bc last-m layers
+    gt_pref = np.concatenate([[0.0], np.cumsum(gt_rev)])     # Σ gt last-m layers
+
+    B = np.full((L + 1, L + 1), _INF)
+    path = np.full((L + 1, L + 1), -1, dtype=np.int64)
+    B[0, 0] = 0.0
+
+    ms = np.arange(L + 1)
+    for n in range(1, L + 1):
+        prev = B[:, n - 1]
+        ready = bc_pref                              # compute-done time per m
+        # cand[m, k] = max(prev[k], ready[m]) + Δt + (gt_pref[m] - gt_pref[k])
+        cand = np.maximum(prev[None, :], ready[:, None]) + costs.dt \
+            + gt_pref[:, None] - gt_pref[None, :]
+        cand[ms[:, None] <= ms[None, :]] = _INF
+        ks = np.argmin(cand, axis=1)
+        vals = cand[ms, ks]
+        valid = ms >= n
+        B[valid, n] = vals[valid]
+        path[valid, n] = ks[valid]
+
+    n_star = int(np.argmin(B[L, 1:]) + 1)
+    t_star = float(B[L, n_star])
+    bounds = _traceback(path, L, n_star)
+    # bounds are in reversed coordinates: reversed position j covers original
+    # layer L+1-j; chain segment (k, m] reversed = original layers
+    # [L-m+1 .. L-k], transmitted top-down.
+    segments = tuple((L - bounds[i + 1] + 1, L - bounds[i])
+                     for i in range(len(bounds) - 1))
+    assert abs(backward_time(costs, segments) - t_star) <= 1e-9 * max(1.0, t_star)
+    return DPResult(segments=segments, time=t_star, table=B,
+                    num_transmissions=n_star)
+
+
+def dynacomm_schedule(costs: LayerCosts):
+    """Both directions; returns ((fwd_segments, bwd_segments), total_time)."""
+    f = dp_forward(costs)
+    b = dp_backward(costs)
+    return (f.segments, b.segments), f.time + b.time

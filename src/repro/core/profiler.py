@@ -1,0 +1,130 @@
+"""Real-time profiling module (paper Section IV-A).
+
+Produces the cost vectors ``pt, fc, bc, gt`` and the overhead ``Δt`` that
+feed the schedulers, from one of three sources:
+
+* **analytic** — per-layer FLOP/byte counts (from the model zoo's
+  ``layer_profiles()`` or from ``compiled.cost_analysis()`` in the dry-run)
+  pushed through a hardware model (`EdgeNetworkModel` for the paper's
+  testbed, `TPUSystemModel` for the adaptation target);
+* **measured** — wall-clock timing of jitted per-layer forward/VJP callables
+  (the CPU-runtime analogue of mxnet.profiler), median of repeated runs;
+* **recorded** — literal cost vectors (used by the Fig. 12 complexity
+  benchmark on randomly generated profiles, as in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.costmodel import LayerCosts
+from repro.core.netmodel import EdgeNetworkModel, TPUSystemModel
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProfile:
+    """Static per-layer workload description."""
+
+    name: str
+    param_bytes: float
+    flops_fwd: float
+    flops_bwd: float | None = None     # default: 2x forward (dL/dx + dL/dw)
+    grad_bytes: float | None = None    # default: == param_bytes
+
+    @property
+    def bwd(self) -> float:
+        return 2.0 * self.flops_fwd if self.flops_bwd is None else self.flops_bwd
+
+    @property
+    def gbytes(self) -> float:
+        return self.param_bytes if self.grad_bytes is None else self.grad_bytes
+
+
+def costs_from_profiles(profiles: Sequence[LayerProfile],
+                        *,
+                        net: EdgeNetworkModel | TPUSystemModel,
+                        compute_flops_per_s: float | None = None) -> LayerCosts:
+    """Analytic cost vectors from layer workloads + a hardware model.
+
+    ``compute_flops_per_s`` overrides the compute rate (needed for the edge
+    regime, where `EdgeNetworkModel` has no compute side — the paper's Xeon
+    workers); for `TPUSystemModel` it defaults to peak*mfu.
+    """
+    pbytes = np.array([p.param_bytes for p in profiles], dtype=np.float64)
+    gbytes = np.array([p.gbytes for p in profiles], dtype=np.float64)
+    f_fwd = np.array([p.flops_fwd for p in profiles], dtype=np.float64)
+    f_bwd = np.array([p.bwd for p in profiles], dtype=np.float64)
+
+    pt = net.transfer_time(pbytes)
+    gt = net.transfer_time(gbytes)
+    if compute_flops_per_s is not None:
+        fc = f_fwd / compute_flops_per_s
+        bc = f_bwd / compute_flops_per_s
+    elif isinstance(net, TPUSystemModel):
+        fc = net.compute_time(f_fwd)
+        bc = net.compute_time(f_bwd)
+    else:
+        raise ValueError("edge regime requires compute_flops_per_s")
+    return LayerCosts(pt=pt, fc=fc, bc=bc, gt=gt, dt=net.dt)
+
+
+# ---------------------------------------------------------------------------
+# Measured profiling (CPU runtime)
+# ---------------------------------------------------------------------------
+
+
+def _block(x):
+    import jax
+    jax.block_until_ready(x)
+    return x
+
+
+def time_callable(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` (blocking on the result)."""
+    for _ in range(warmup):
+        _block(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def measure_layer_costs(fwd_fns: Sequence[Callable],
+                        bwd_fns: Sequence[Callable],
+                        fwd_args: Sequence[tuple],
+                        bwd_args: Sequence[tuple],
+                        *,
+                        param_bytes: Sequence[float],
+                        net: EdgeNetworkModel | TPUSystemModel,
+                        iters: int = 5) -> LayerCosts:
+    """Wall-clock fc/bc per layer; pt/gt analytic from bytes + network model.
+
+    This mirrors the paper's deployment: compute costs are *profiled* on the
+    worker, transmission costs follow the network condition.
+    """
+    fc = np.array([time_callable(f, *a, iters=iters)
+                   for f, a in zip(fwd_fns, fwd_args)])
+    bc = np.array([time_callable(f, *a, iters=iters)
+                   for f, a in zip(bwd_fns, bwd_args)])
+    pb = np.asarray(param_bytes, dtype=np.float64)
+    return LayerCosts(pt=net.transfer_time(pb), fc=fc, bc=bc,
+                      gt=net.transfer_time(pb), dt=net.dt)
+
+
+def random_costs(L: int, *, seed: int = 0, dt: float = 1e-2,
+                 comm_scale: float = 1.0, comp_scale: float = 1.0) -> LayerCosts:
+    """Randomly generated profiling results (paper Fig. 12 methodology)."""
+    rng = np.random.default_rng(seed)
+    return LayerCosts(
+        pt=rng.uniform(0.1, 10.0, L) * 1e-3 * comm_scale,
+        fc=rng.uniform(0.1, 10.0, L) * 1e-3 * comp_scale,
+        bc=rng.uniform(0.2, 20.0, L) * 1e-3 * comp_scale,
+        gt=rng.uniform(0.1, 10.0, L) * 1e-3 * comm_scale,
+        dt=dt,
+    )

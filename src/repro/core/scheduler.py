@@ -1,0 +1,108 @@
+"""The DynaComm scheduler (paper Section IV) and the strategy registry.
+
+``DynaCommScheduler`` wires profiling → DP → decision, with the overhead
+minimizations of Section IV-C: decisions are recomputed once per epoch by
+default (``reschedule_every`` iterations), and the forward scheduler for
+iteration i+1 can run in the idle window after the last backward compute
+(modelled by ``scheduling_overhead_hidden``).
+
+``STRATEGIES`` exposes every competing method under a uniform interface so
+benchmarks and the distributed trainer can switch with a string:
+``sequential | lbl | ibatch | dynacomm | bruteforce``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Tuple
+
+from repro.core import baselines, bruteforce, dp, greedy
+from repro.core.costmodel import (LayerCosts, Segment, backward_time,
+                                  forward_time, iteration_time)
+
+Decision = Tuple[Tuple[Segment, ...], Tuple[Segment, ...]]  # (forward, backward)
+
+
+def _seq(costs: LayerCosts) -> Decision:
+    L = costs.num_layers
+    return baselines.sequential_forward(L), baselines.sequential_backward(L)
+
+
+def _lbl(costs: LayerCosts) -> Decision:
+    L = costs.num_layers
+    return baselines.lbl_forward(L), baselines.lbl_backward(L)
+
+
+def _ibatch(costs: LayerCosts) -> Decision:
+    (f, b), _ = greedy.ibatch_schedule(costs)
+    return f, b
+
+
+def _dynacomm(costs: LayerCosts) -> Decision:
+    (f, b), _ = dp.dynacomm_schedule(costs)
+    return f, b
+
+
+def _bruteforce(costs: LayerCosts) -> Decision:
+    f, _ = bruteforce.bruteforce_forward(costs)
+    b, _ = bruteforce.bruteforce_backward(costs)
+    return f, b
+
+
+STRATEGIES: Dict[str, Callable[[LayerCosts], Decision]] = {
+    "sequential": _seq,
+    "lbl": _lbl,
+    "ibatch": _ibatch,
+    "dynacomm": _dynacomm,
+    "bruteforce": _bruteforce,
+}
+
+
+def schedule(costs: LayerCosts, strategy: str) -> Decision:
+    try:
+        return STRATEGIES[strategy](costs)
+    except KeyError:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"choose from {sorted(STRATEGIES)}") from None
+
+
+def evaluate(costs: LayerCosts, decision: Decision) -> Dict[str, float]:
+    f, b = decision
+    return {
+        "forward": forward_time(costs, f),
+        "backward": backward_time(costs, b),
+        "total": iteration_time(costs, f, b),
+    }
+
+
+@dataclasses.dataclass
+class DynaCommScheduler:
+    """Run-time scheduler with per-epoch decision caching (Section IV-C)."""
+
+    strategy: str = "dynacomm"
+    reschedule_every: int = 195       # paper: once per epoch (CIFAR-10, bs 256)
+
+    _decision: Decision | None = None
+    _iter_seen: int = 0
+    last_scheduling_seconds: float = 0.0
+
+    def decision_for_iteration(self, costs: LayerCosts) -> Decision:
+        """Return the active decision, re-scheduling on the epoch boundary."""
+        if self._decision is None or self._iter_seen % self.reschedule_every == 0:
+            t0 = time.perf_counter()
+            self._decision = schedule(costs, self.strategy)
+            self.last_scheduling_seconds = time.perf_counter() - t0
+        self._iter_seen += 1
+        return self._decision
+
+    def scheduling_overhead_hidden(self, costs: LayerCosts) -> bool:
+        """Idle-event-trigger check (Section IV-C / Table I): the forward
+        scheduler for iteration i+1 fits in the window
+        (Δt + gt_i^1) while the last gradient push is in flight."""
+        window = costs.dt + float(costs.gt[0])
+        return self.last_scheduling_seconds <= window
+
+    def reset(self) -> None:
+        self._decision = None
+        self._iter_seen = 0

@@ -1,0 +1,124 @@
+"""Discrete-event execution simulator for a scheduled iteration.
+
+Builds the explicit per-mini-procedure timeline implied by a decomposition
+decision, enforcing the paper's partial-order constraints (eqs. 1-7), and
+derives the stacked-bar decomposition of Figs. 5-8 (non-overlapping
+computation / overlapping / non-overlapping communication).
+
+The simulator is deliberately independent of the closed-form ``f_m`` in
+``costmodel`` — tests assert both agree, which is the machine-checked version
+of the paper's claim that ``f_m`` measures the schedule correctly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import (LayerCosts, PhaseBreakdown, Segment,
+                                  phase_breakdown, validate_backward_segments,
+                                  validate_forward_segments)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    kind: str            # 'pt' | 'fc' | 'bc' | 'gt'
+    layers: Segment      # (lo, hi) covered
+    start: float
+    end: float
+
+
+@dataclasses.dataclass(frozen=True)
+class IterationTimeline:
+    forward_events: Tuple[Event, ...]
+    backward_events: Tuple[Event, ...]
+    forward_time: float
+    backward_time: float
+
+    @property
+    def total(self) -> float:
+        return self.forward_time + self.backward_time
+
+    def breakdown(self, phase: str) -> PhaseBreakdown:
+        events = self.forward_events if phase == "forward" else self.backward_events
+        comm = [(e.start, e.end) for e in events if e.kind in ("pt", "gt")]
+        comp = [(e.start, e.end) for e in events if e.kind in ("fc", "bc")]
+        return phase_breakdown(comm, comp)
+
+
+def simulate_forward(costs: LayerCosts,
+                     segments: Sequence[Segment]) -> Tuple[List[Event], float]:
+    validate_forward_segments(segments, costs.num_layers)
+    events: List[Event] = []
+    link_free = 0.0
+    comp_free = 0.0
+    for lo, hi in segments:
+        # transmission mini-procedure (includes its Δt setup)
+        dur = costs.dt + float(np.sum(costs.pt[lo - 1:hi]))
+        t0, t1 = link_free, link_free + dur
+        events.append(Event("pt", (lo, hi), t0, t1))
+        link_free = t1
+        # per-layer forward compute mini-procedures within the segment
+        for l in range(lo, hi + 1):
+            start = max(comp_free, t1)  # eq. (1): needs this segment's params
+            end = start + float(costs.fc[l - 1])
+            events.append(Event("fc", (l, l), start, end))
+            comp_free = end
+    return events, comp_free
+
+
+def simulate_backward(costs: LayerCosts,
+                      segments: Sequence[Segment]) -> Tuple[List[Event], float]:
+    validate_backward_segments(segments, costs.num_layers)
+    events: List[Event] = []
+    comp_free = 0.0
+    link_free = 0.0
+    for lo, hi in segments:
+        # per-layer backward compute, layer hi down to lo (eq. 6)
+        for l in range(hi, lo - 1, -1):
+            end = comp_free + float(costs.bc[l - 1])
+            events.append(Event("bc", (l, l), comp_free, end))
+            comp_free = end
+        # gradient push once the whole segment's grads exist (eq. 2)
+        start = max(link_free, comp_free)
+        dur = costs.dt + float(np.sum(costs.gt[lo - 1:hi]))
+        events.append(Event("gt", (lo, hi), start, start + dur))
+        link_free = start + dur
+    return events, link_free
+
+
+def simulate_iteration(costs: LayerCosts,
+                       fwd_segments: Sequence[Segment],
+                       bwd_segments: Sequence[Segment]) -> IterationTimeline:
+    f_events, f_t = simulate_forward(costs, fwd_segments)
+    b_events, b_t = simulate_backward(costs, bwd_segments)
+    return IterationTimeline(tuple(f_events), tuple(b_events), f_t, b_t)
+
+
+def check_partial_orders(timeline: IterationTimeline, L: int) -> None:
+    """Assert the timeline satisfies eqs. (1)-(7).  Raises on violation."""
+    eps = 1e-12
+
+    def ends(events, kind):
+        out = {}
+        for e in events:
+            if e.kind == kind:
+                for l in range(e.layers[0], e.layers[1] + 1):
+                    out[l] = e
+        return out
+
+    pt = ends(timeline.forward_events, "pt")
+    fc = ends(timeline.forward_events, "fc")
+    bc = ends(timeline.backward_events, "bc")
+    gt = ends(timeline.backward_events, "gt")
+
+    for l in range(1, L + 1):
+        assert pt[l].end <= fc[l].start + eps, f"eq1 violated at layer {l}"
+        assert bc[l].end <= gt[l].start + eps, f"eq2 violated at layer {l}"
+    for l in range(1, L):
+        assert pt[l].end <= pt[l + 1].end + eps, "eq4"
+        assert fc[l].end <= fc[l + 1].start + eps, "eq5"
+        assert bc[l + 1].end <= bc[l].start + eps, "eq6"
+        assert gt[l + 1].end <= gt[l].end + eps, "eq7"

@@ -1,0 +1,47 @@
+"""ASCII timeline rendering of a scheduled iteration (Fig. 2/3 style).
+
+``render_timeline`` draws the link lane and the compute lane of one phase
+as a proportional text Gantt chart — the quickest way to *see* what a
+decomposition decision does to the overlap structure.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.costmodel import LayerCosts, Segment
+from repro.core.simulator import simulate_backward, simulate_forward
+
+
+def _lane(events, t_end: float, width: int, fill: str) -> str:
+    lane = [" "] * width
+    for e in events:
+        lo = int(round(e.start / t_end * (width - 1)))
+        hi = max(lo + 1, int(round(e.end / t_end * (width - 1))))
+        for i in range(lo, min(hi, width)):
+            lane[i] = fill
+        if hi - lo >= 3:
+            label = f"{e.layers[0]}" if e.layers[0] == e.layers[1] \
+                else f"{e.layers[0]}-{e.layers[1]}"
+            for j, ch in enumerate(label[:hi - lo - 1]):
+                lane[lo + j] = ch
+    return "".join(lane)
+
+
+def render_timeline(costs: LayerCosts, segments: Sequence[Segment], *,
+                    phase: str = "forward", width: int = 78) -> str:
+    if phase == "forward":
+        events, t_end = simulate_forward(costs, segments)
+        comm_kind, comp_kind = "pt", "fc"
+    else:
+        events, t_end = simulate_backward(costs, segments)
+        comm_kind, comp_kind = "gt", "bc"
+    comm = [e for e in events if e.kind == comm_kind]
+    comp = [e for e in events if e.kind == comp_kind]
+    lines = [
+        f"{phase}: {len(segments)} transmission mini-procedure(s), "
+        f"makespan {t_end:.4f}s",
+        "link    |" + _lane(comm, t_end, width, "=") + "|",
+        "compute |" + _lane(comp, t_end, width, "#") + "|",
+    ]
+    return "\n".join(lines)

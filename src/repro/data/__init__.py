@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticCIFAR, SyntheticText, batch_for,
+                                 make_pipeline)
+
+__all__ = ["SyntheticText", "SyntheticCIFAR", "make_pipeline", "batch_for"]

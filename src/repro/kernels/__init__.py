@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel directory ships three files:
+
+* ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+  VMEM tiling (TPU is the TARGET; this container validates via
+  ``interpret=True``);
+* ``ops.py`` — the jit'd public wrapper (custom_vjp where training uses it);
+* ``ref.py`` — the pure-jnp oracle the tests sweep against.
+
+Kernels:
+
+* ``bucket_pack`` — DynaComm transmissions move *buckets* of heterogeneous
+  layer tensors; fusing them into one contiguous buffer before the
+  collective (and scattering back after) is the per-mini-procedure data
+  movement.  Tiled HBM→VMEM copies with scalar-prefetched offsets.
+* ``flash_attention`` — blockwise causal attention with sliding-window and
+  logit-softcap support (gemma2/gemma3), online softmax in VMEM.
+* ``rglru_scan`` — the RG-LRU linear recurrence, vectorized over channels
+  (lanes), sequential over time blocks with a VMEM-resident carry.
+"""

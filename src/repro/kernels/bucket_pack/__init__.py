@@ -1,0 +1,3 @@
+from repro.kernels.bucket_pack.ops import bucket_pack, bucket_unpack
+
+__all__ = ["bucket_pack", "bucket_unpack"]

@@ -1,0 +1,115 @@
+"""Pallas kernel: fuse a bucket of padded layer segments into one flat buffer.
+
+DynaComm's transmission mini-procedures move *buckets* of per-layer flat
+parameter/gradient vectors.  Before the collective, the runtime packs the
+bucket's K segments (each padded to a TILE multiple) into one contiguous
+buffer so the all-gather / reduce-scatter sees a single operand; after the
+collective the inverse unpack restores per-layer views.
+
+Layout: segments (K, Lmax), aligned lengths prefetched as scalars.  Grid is
+(K, Lmax // TILE); program (k, t) copies input tile (k, t) to output tile
+``offset[k]//TILE + t`` — a pure HBM→VMEM→HBM streaming copy, 128-lane
+aligned, no compute.  Tiles past a segment's aligned length are masked by
+redirecting them to a scratch slot at the end of the output buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 512  # 4 sublanes x 128 lanes at f32
+
+
+def aligned(n: int) -> int:
+    return ((n + TILE - 1) // TILE) * TILE
+
+
+def _pack_kernel(offsets_ref, seg_ref, out_ref):
+    # out BlockSpec index_map already placed us at the target tile; the body
+    # is a straight VMEM copy.
+    out_ref[...] = seg_ref[...]
+
+
+def _pack_index_out(k, t, offsets_ref):
+    # target tile for (segment k, tile t); tiles beyond the segment's aligned
+    # length land in the trailing scratch tile.
+    base = offsets_ref[k] // TILE
+    ntiles = offsets_ref[k + 1] // TILE - base
+    in_range = t < ntiles
+    return (jnp.where(in_range, base + t, offsets_ref[-1] // TILE),)
+
+
+def pack_pallas(segments: jnp.ndarray, aligned_lengths: Sequence[int], *,
+                interpret: bool = True) -> jnp.ndarray:
+    """segments: (K, Lmax) with Lmax % TILE == 0 → (sum(aligned_lengths),)."""
+    k_count, lmax = segments.shape
+    assert lmax % TILE == 0
+    offsets = np.concatenate([[0], np.cumsum(aligned_lengths)]).astype(np.int32)
+    total = int(offsets[-1])
+
+    grid = (k_count, lmax // TILE)
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((None, TILE), lambda k, t, offs: (k, t))],
+            out_specs=pl.BlockSpec((TILE,), _pack_index_out),
+        ),
+        out_shape=jax.ShapeDtypeStruct((total + TILE,), segments.dtype),
+        interpret=interpret,
+    )(jnp.asarray(offsets), segments)
+    return out[:total]
+
+
+def _unpack_kernel(offsets_ref, flat_ref, out_ref):
+    out_ref[...] = flat_ref[...]
+
+
+def _unpack_index_in(k, t, offsets_ref):
+    base = offsets_ref[k] // TILE
+    ntiles = offsets_ref[k + 1] // TILE - base
+    in_range = t < ntiles
+    # out-of-range tiles read tile 0 (the write side zero-masks them)
+    return (jnp.where(in_range, base + t, 0),)
+
+
+def _unpack_masked_kernel(offsets_ref, flat_ref, out_ref):
+    k = pl.program_id(0)
+    t = pl.program_id(1)
+    ntiles = (offsets_ref[k + 1] - offsets_ref[k]) // TILE
+    @pl.when(t < ntiles)
+    def _():
+        out_ref[...] = flat_ref[...]
+    @pl.when(t >= ntiles)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def unpack_pallas(flat: jnp.ndarray, aligned_lengths: Sequence[int],
+                  lmax: int, *, interpret: bool = True) -> jnp.ndarray:
+    """flat (sum(aligned_lengths),) → (K, Lmax) zero-padded views."""
+    assert lmax % TILE == 0
+    k_count = len(aligned_lengths)
+    offsets = np.concatenate([[0], np.cumsum(aligned_lengths)]).astype(np.int32)
+
+    grid = (k_count, lmax // TILE)
+    out = pl.pallas_call(
+        _unpack_masked_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((TILE,), _unpack_index_in)],
+            out_specs=pl.BlockSpec((None, TILE), lambda k, t, offs: (k, t)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((k_count, lmax), flat.dtype),
+        interpret=interpret,
+    )(jnp.asarray(offsets), flat)
+    return out

@@ -1,0 +1,33 @@
+"""Public jit'd wrappers for bucket pack/unpack."""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_pack.bucket_pack import (TILE, aligned, pack_pallas,
+                                                   unpack_pallas)
+
+
+def pad_segments(vectors: Sequence[jnp.ndarray]) -> Tuple[jnp.ndarray, tuple]:
+    """Ragged 1-D vectors → (K, Lmax) TILE-padded matrix + aligned lengths."""
+    alens = tuple(aligned(int(v.shape[0])) for v in vectors)
+    lmax = max(alens)
+    rows = [jnp.pad(v, (0, lmax - v.shape[0])) for v in vectors]
+    return jnp.stack(rows), alens
+
+
+@functools.partial(jax.jit, static_argnames=("aligned_lengths", "interpret"))
+def bucket_pack(segments: jnp.ndarray, aligned_lengths: tuple, *,
+                interpret: bool = True) -> jnp.ndarray:
+    return pack_pallas(segments, aligned_lengths, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("aligned_lengths", "lmax", "interpret"))
+def bucket_unpack(flat: jnp.ndarray, aligned_lengths: tuple, lmax: int, *,
+                  interpret: bool = True) -> jnp.ndarray:
+    return unpack_pallas(flat, aligned_lengths, lmax, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for bucket pack/unpack."""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+
+def bucket_pack_ref(segments: jnp.ndarray, lengths: Sequence[int]
+                    ) -> jnp.ndarray:
+    """segments: (K, Lmax); lengths[i] <= Lmax → flat (sum(lengths),)."""
+    return jnp.concatenate([segments[i, :l] for i, l in enumerate(lengths)])
+
+
+def bucket_unpack_ref(flat: jnp.ndarray, lengths: Sequence[int],
+                      lmax: int) -> jnp.ndarray:
+    """flat (sum(lengths),) → (K, Lmax) zero-padded."""
+    out, off = [], 0
+    for l in lengths:
+        seg = flat[off:off + l]
+        out.append(jnp.pad(seg, (0, lmax - l)))
+        off += l
+    return jnp.stack(out)

@@ -1,0 +1,72 @@
+"""Public wrapper: GQA layout handling, head-dim padding, custom VJP.
+
+Forward runs the Pallas kernel; backward recomputes through the jnp oracle
+(standard kernel-forward / reference-backward pairing — the training path
+in this repo uses the XLA blockwise attention, so the kernel VJP exists for
+API completeness and is exercised in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_head(x, mult=128):
+    hd = x.shape[-1]
+    pad = (-hd) % mult
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, hd
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                    bq=128, bk=128, interpret=True):
+    """q: (B, H, Tq, hd); k,v: (B, Hkv, Tk, hd) → (B, H, Tq, hd)."""
+    b, h, tq, _ = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    kb = jnp.repeat(k, rep, axis=1) if rep > 1 else k
+    vb = jnp.repeat(v, rep, axis=1) if rep > 1 else v
+
+    qp, hd = _pad_head(q)
+    kp, _ = _pad_head(kb)
+    vp, _ = _pad_head(vb)
+    out = flash_attention_pallas(
+        qp.reshape(b * h, tq, qp.shape[-1]),
+        kp.reshape(b * h, kp.shape[2], kp.shape[-1]),
+        vp.reshape(b * h, vp.shape[2], vp.shape[-1]),
+        causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, scale=1.0 / (hd ** 0.5), interpret=interpret)
+    return out.reshape(b, h, tq, -1)[..., :hd]
+
+
+def _ref_fwd(q, k, v, causal, window, softcap):
+    h, hkv = q.shape[1], k.shape[1]
+    rep = h // hkv
+    kb = jnp.repeat(k, rep, axis=1) if rep > 1 else k
+    vb = jnp.repeat(v, rep, axis=1) if rep > 1 else v
+    return attention_ref(q, kb, vb, causal=causal, window=window,
+                         softcap=softcap)
+
+
+def _fwd(q, k, v, causal, window, softcap, bq, bk, interpret):
+    out = flash_attention(q, k, v, causal, window, softcap, bq, bk, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, bq, bk, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_fwd(q_, k_, v_, causal, window,
+                                                 softcap), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,3 @@
+from repro.kernels.rglru_scan.ops import rglru_scan
+
+__all__ = ["rglru_scan"]

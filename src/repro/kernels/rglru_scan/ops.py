@@ -1,0 +1,42 @@
+"""Public wrapper for the RG-LRU scan kernel (pad + custom VJP).
+
+Backward differentiates through the associative-scan oracle (the linear
+recurrence has a clean transpose; the kernel fwd / reference bwd pairing
+keeps training numerically identical to the XLA path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rglru_scan(a: jnp.ndarray, x: jnp.ndarray, bt: int = 128, bw: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + x_t over axis 1; a, x: (B, T, W)."""
+    b, t, w = a.shape
+    pt = (-t) % bt
+    pw = (-w) % bw
+    ap = jnp.pad(a, ((0, 0), (0, pt), (0, pw)))
+    xp = jnp.pad(x, ((0, 0), (0, pt), (0, pw)))
+    h = rglru_scan_pallas(ap, xp, bt=bt, bw=bw, interpret=interpret)
+    return h[:, :t, :w]
+
+
+def _fwd(a, x, bt, bw, interpret):
+    return rglru_scan(a, x, bt, bw, interpret), (a, x)
+
+
+def _bwd(bt, bw, interpret, res, g):
+    a, x = res
+    _, vjp = jax.vjp(rglru_scan_ref, a, x)
+    return vjp(g)
+
+
+rglru_scan.defvjp(_fwd, _bwd)

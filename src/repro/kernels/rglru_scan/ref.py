@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + x_t along axis=1.  a, x: (B, T, W)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h

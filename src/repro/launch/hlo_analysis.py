@@ -1,0 +1,128 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+``collective_bytes`` parses the partitioned HLO text (``compiled.as_text()``)
+and sums operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute — the quantity ``cost_analysis`` does not
+report.  ``roofline`` combines it with HLO FLOPs/bytes into the three terms
+of EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+from repro.core.netmodel import (TPU_HBM_BW, TPU_ICI_BW_PER_LINK,
+                                 TPU_PEAK_FLOPS_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+# "  %name = dtype[dims]{layout} opcode(operand, ...)" — tuple types allowed
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                     r"(\(.*?\)|[\w\[\]{},:#\d]+)\s+([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, e.g. 'bf16[8,128]{1,0}' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind operand bytes summed over the module (per device).
+
+    The HLO printer references operands by name, so first build a
+    name → output-type map over all instruction definitions, then resolve
+    each collective's operand names against it.
+    """
+    defs: Dict[str, str] = {}
+    found = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        defs[name] = type_str
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in _COLLECTIVES:
+            depth, end = 1, len(rest)
+            for i, ch in enumerate(rest):  # operand list up to matching ')'
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            found.append((base, rest[:end]))
+
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for kind, operands in found:
+        total = 0
+        for op in operands.split(","):
+            m = _OPERAND_RE.match(op.strip())
+            if m and m.group(1) in defs:
+                total += _shape_bytes(defs[m.group(1)])
+        out[kind] += total
+        counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops: float                  # per-device HLO FLOPs
+    hbm_bytes: float              # per-device HLO bytes accessed
+    coll_bytes: float             # per-device collective operand bytes
+    coll_detail: Dict[str, int]
+    chips: int
+
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=lambda kv: terms[kv])
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline(*, flops: float, hbm_bytes: float, coll: Dict[str, int],
+             chips: int, peak_flops: float = TPU_PEAK_FLOPS_BF16,
+             hbm_bw: float = TPU_HBM_BW,
+             ici_bw: float = TPU_ICI_BW_PER_LINK) -> Roofline:
+    """FLOPs/bytes from ``cost_analysis`` are PER-DEVICE for a partitioned
+    module, so each term divides by a single chip's capability; ``chips``
+    is retained for reporting."""
+    coll_total = sum(v for k, v in coll.items() if not k.startswith("_"))
+    return Roofline(
+        flops=flops, hbm_bytes=hbm_bytes, coll_bytes=coll_total,
+        coll_detail=coll, chips=chips,
+        compute_s=flops / peak_flops,
+        memory_s=hbm_bytes / hbm_bw,
+        collective_s=coll_total / ici_bw,
+    )

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run pins the device count via XLA_FLAGS
+before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_zero_mesh(*, multi_pod: bool = False):
+    """All chips on the ZeRO/data axis — the DynaComm bucketed-trainer mesh
+    (the PS analogue: pure data parallelism, paper Section III)."""
+    if multi_pod:
+        return jax.make_mesh((2, 256), ("pod", "data"))
+    return jax.make_mesh((256,), ("data",))
+
+
+def make_host_mesh(num_devices: int | None = None, axes=("data",)):
+    """Small CPU mesh for tests/examples (uses whatever devices exist)."""
+    import numpy as np
+    devs = jax.devices()
+    n = num_devices or len(devs)
+    shape = (n,) if len(axes) == 1 else None
+    if shape is None:
+        raise ValueError("provide 1-D axes or build your own mesh")
+    from jax.sharding import Mesh
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)

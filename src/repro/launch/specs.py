@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as model_lib
+
+S = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for train/prefill modes."""
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio":
+        batch = {"frames": S((b, t, cfg.d_model), dtype)}
+    elif cfg.frontend == "vision":
+        nv = min(cfg.num_vision_tokens, t - 1)
+        batch = {"tokens": S((b, t - nv), jnp.int32),
+                 "vision_embeds": S((b, nv, cfg.d_model), dtype)}
+    else:
+        batch = {"tokens": S((b, t), jnp.int32)}
+    if shape.mode == "train":
+        lab_t = batch["tokens"].shape[1] if "tokens" in batch else t
+        batch["labels"] = S((b, lab_t), jnp.int32)
+    return batch
+
+
+def state_specs(cfg: ArchConfig, optimizer, dtype=jnp.bfloat16
+                ) -> Tuple[Any, Any]:
+    """(params, opt_state) ShapeDtypeStructs via eval_shape."""
+    params = jax.eval_shape(
+        lambda k: model_lib.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    opt_state = jax.eval_shape(optimizer.init, params)
+    return params, opt_state
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16) -> Any:
+    """Per-layer decode cache structs sized for shape.seq_len."""
+    return jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                      dtype))
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    token = S((shape.global_batch, 1), jnp.int32)
+    return token, cache_specs(cfg, shape, dtype)

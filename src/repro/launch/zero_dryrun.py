@@ -1,0 +1,145 @@
+"""§Perf Pair C: the paper's technique itself at production scale.
+
+Lowers the DynaComm bucketed ZeRO trainer on the 256-chip data mesh (the
+PS-analogue: pure data parallelism) for each scheduling strategy, counts
+the collectives, and evaluates the paper's objective f_m under the
+TPU cost model — the paper-faithful comparison — plus a beyond-paper
+steady-state pipelining bound (double-buffered cross-iteration overlap).
+
+Usage: PYTHONPATH=src python -m repro.launch.zero_dryrun [--arch granite-3-2b]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core import (LayerCosts, TPUSystemModel, costs_from_profiles,
+                        evaluate, plan_from_decision, schedule)
+from repro.dist.zero import ZeroTrainer
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_zero_mesh
+from repro.models import num_sched_layers
+from repro.models.profiles import layer_profiles
+from repro.optim import adamw
+
+S = jax.ShapeDtypeStruct
+
+
+def tpu_costs(arch: str, shape_name: str, data_axis: int) -> LayerCosts:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    profs = layer_profiles(cfg, shape)
+    # per-device compute: global layer FLOPs / data shards
+    profs = [type(p)(name=p.name, param_bytes=p.param_bytes,
+                     flops_fwd=p.flops_fwd / data_axis) for p in profs]
+    net = TPUSystemModel(data_axis_size=data_axis)
+    return costs_from_profiles(profs, net=net)
+
+
+def state_structs(tr: ZeroTrainer):
+    sh = tr._flat_sharding()
+    flats = [S((spec.padded,), jnp.float32, sharding=sh) for spec in tr.specs]
+    opt_state = jax.eval_shape(tr.optimizer.init, flats)
+    opt_state = jax.tree_util.tree_map(
+        lambda x: S(x.shape, x.dtype, sharding=sh) if x.ndim == 1
+        else S(x.shape, x.dtype), opt_state)
+    return {"flat_params": flats, "opt": opt_state,
+            "step": S((), jnp.int32)}
+
+
+def steady_state_bound(costs: LayerCosts, decision) -> float:
+    """Beyond-paper: double-buffered cross-iteration pipelining.
+
+    With weights double-buffered, iteration i+1's pulls overlap iteration
+    i's backward; steady-state iteration time = max(link busy, compute
+    busy) instead of the paper's serial fwd-phase + bwd-phase.
+    """
+    (fsegs, bsegs) = decision
+    n = len(fsegs) + len(bsegs)
+    link = n * costs.dt + float(np.sum(costs.pt) + np.sum(costs.gt))
+    comp = float(np.sum(costs.fc) + np.sum(costs.bc))
+    return max(link, comp)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--skip-lowering", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    mesh = make_zero_mesh()
+    data_axis = mesh.shape["data"]
+    cfg = get_config(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    costs = tpu_costs(args.arch, args.shape, data_axis)
+    Ls = num_sched_layers(cfg)
+
+    b_local = shape.global_batch
+    batch_structs = {
+        "tokens": S((b_local, shape.seq_len), jnp.int32,
+                    sharding=NamedSharding(mesh, P("data", None))),
+        "labels": S((b_local, shape.seq_len), jnp.int32,
+                    sharding=NamedSharding(mesh, P("data", None))),
+    }
+
+    results = {"arch": args.arch, "shape": args.shape,
+               "mesh": f"zero-{data_axis}", "dt_tpu": costs.dt,
+               "strategies": {}}
+    for strat in ("sequential", "lbl", "ibatch", "dynacomm"):
+        decision = schedule(costs, strat)
+        plan = plan_from_decision(*decision, Ls)
+        times = evaluate(costs, decision)
+        rec = {
+            "fwd_buckets": len(plan.forward),
+            "bwd_buckets": len(plan.backward),
+            "fm_iteration_s": times["total"],
+            "fm_forward_s": times["forward"],
+            "fm_backward_s": times["backward"],
+            "steady_state_s": steady_state_bound(costs, decision),
+        }
+        if not args.skip_lowering:
+            tr = ZeroTrainer(cfg=cfg, mesh=mesh, plan=plan,
+                             optimizer=adamw(1e-4))
+            step = jax.jit(tr.build_train_step())
+            lowered = step.lower(state_structs(tr), batch_structs)
+            compiled = lowered.compile()
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            mem = compiled.memory_analysis()
+            rec.update({
+                "hlo_all_gathers": coll["_counts"]["all-gather"],
+                "hlo_reduce_scatters": coll["_counts"]["reduce-scatter"],
+                "coll_bytes_per_device":
+                    sum(v for k, v in coll.items() if not k.startswith("_")),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            })
+        results["strategies"][strat] = rec
+        print(strat, json.dumps(rec))
+
+    seq = results["strategies"]["sequential"]["fm_iteration_s"]
+    dyn = results["strategies"]["dynacomm"]["fm_iteration_s"]
+    pipe = results["strategies"]["dynacomm"]["steady_state_s"]
+    results["dynacomm_vs_sequential_pct"] = round(100 * (1 - dyn / seq), 2)
+    results["pipelined_vs_dynacomm_pct"] = round(100 * (1 - pipe / dyn), 2)
+    print("dynacomm reduces iteration by",
+          results["dynacomm_vs_sequential_pct"], "% vs sequential;"
+          " beyond-paper pipelining adds",
+          results["pipelined_vs_dynacomm_pct"], "% on top")
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(results) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""GQA attention with rope, sliding window, logit softcap and a KV cache.
+
+Three modes share one code path:
+
+* ``train`` / ``prefill`` — full-sequence attention, causal or bidirectional
+  (encoder).  Prefill additionally returns the populated cache.
+* ``decode`` — one new token against a preallocated cache.  Global layers
+  cache the whole sequence (the cache's sequence axis may be sharded over the
+  ``data`` mesh axis for long-context decode — GSPMD handles the partial
+  softmax); local layers keep a rotating window-sized cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense, init_dense, softcap
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S, n_kv, head_dim)
+    v: jnp.ndarray       # (B, S, n_kv, head_dim)
+    pos: jnp.ndarray     # () int32 — number of tokens already cached
+
+
+def init_attn_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": init_dense(ks[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, local: bool,
+               dtype=jnp.float32) -> KVCache:
+    s = min(max_len, cfg.sliding_window) if local and cfg.sliding_window else max_len
+    shape = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int, dtype):
+    """(Tq, Tk) additive bias; window>0 limits lookback (sliding window)."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, np.float32(-1e30)).astype(dtype)
+
+
+def _sdpa(q, k, v, bias, n_rep: int, cap: float):
+    """q: (B,Tq,Hq,hd); k,v: (B,Tk,Hkv,hd); bias: (Tq,Tk)."""
+    b, tq, hq, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    qg = q.reshape(b, tq, hkv, n_rep, hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k) / np.sqrt(hd).astype(np.float32)
+    logits = softcap(logits.astype(jnp.float32), cap)
+    logits = logits + bias.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(b, tq, hq, hd)
+
+
+# Sequences longer than this use the blockwise online-softmax path in
+# train/prefill (the full T×T score matrix would blow HBM; this is the
+# XLA-level analogue of the Pallas flash_attention kernel).
+FULL_ATTN_MAX = 1024
+
+
+def _block_bias(q_pos, k_pos, *, causal, window):
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, np.float32(-1e30))
+
+
+def _sdpa_chunked(q, k, v, *, n_rep: int, cap: float, causal: bool,
+                  window: int, chunk: int | None = None):
+    """Blockwise attention with online softmax (flash pattern in pure XLA).
+
+    Memory O(Tq·chunk) instead of O(Tq·Tk); causal/windowed query blocks
+    skip key blocks that are entirely masked, so FLOPs follow the mask.
+    """
+    b, tq, hq, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    if chunk is None:
+        chunk = min(tk, max(1024, tk // 16))
+    while tk % chunk:
+        chunk //= 2
+    n_kv = tk // chunk
+    n_q = tq // chunk if tq % chunk == 0 else 1
+    qc = tq // n_q
+
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, tq, hkv, n_rep, hd)
+    outs = []
+    for qi in range(n_q):
+        q_lo, q_hi = qi * qc, (qi + 1) * qc            # python ints: static
+        q_pos = jnp.arange(q_lo, q_hi)
+        qq = jax.lax.dynamic_slice_in_dim(qg, q_lo, qc, axis=1)
+        m = jnp.full((b, hkv, n_rep, qc), -np.inf, jnp.float32)
+        l = jnp.zeros((b, hkv, n_rep, qc), jnp.float32)
+        acc = jnp.zeros((b, hkv, n_rep, qc, hd), jnp.float32)
+        for ki in range(n_kv):
+            k_lo, k_hi = ki * chunk, (ki + 1) * chunk
+            if causal and k_lo > q_hi - 1:
+                continue                       # entirely in the future
+            if window > 0 and k_hi - 1 <= q_lo - window:
+                continue                       # entirely out of the window
+            k_pos = jnp.arange(k_lo, k_hi)
+            kk = jax.lax.dynamic_slice_in_dim(k, k_lo, chunk, axis=1)
+            vv = jax.lax.dynamic_slice_in_dim(v, k_lo, chunk, axis=1)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qq, kk).astype(jnp.float32)
+            s = softcap(s * scale, cap)
+            s = s + _block_bias(q_pos, k_pos, causal=causal, window=window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] \
+                + jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(q.dtype), vv
+                             ).astype(jnp.float32)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(b, qc, hq, hd)
+                    .astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def attention(params, x: jnp.ndarray, cfg: ArchConfig, *,
+              local: bool, mode: str,
+              cache: Optional[KVCache] = None,
+              positions: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Returns (output (B,T,d_model), updated cache or None)."""
+    b, t, _ = x.shape
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    window = cfg.sliding_window if local else 0
+
+    q = dense(x, params["wq"]).reshape(b, t, cfg.num_heads, cfg.head_dim)
+    k = dense(x, params["wk"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(x, params["wv"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+
+    if mode in ("train", "prefill"):
+        pos = jnp.arange(t) if positions is None else positions
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        if t > FULL_ATTN_MAX:
+            out = _sdpa_chunked(q, k, v, n_rep=n_rep,
+                                cap=cfg.attn_logit_softcap,
+                                causal=cfg.causal, window=window)
+        else:
+            bias = _mask_bias(pos, pos, causal=cfg.causal, window=window,
+                              dtype=jnp.float32)
+            out = _sdpa(q, k, v, bias, n_rep, cfg.attn_logit_softcap)
+        out = out.reshape(b, t, cfg.q_dim)
+        new_cache = None
+        if mode == "prefill":
+            if window and t > window:
+                # rotating buffer invariant: absolute position p sits at
+                # slot p % window
+                ck = jnp.roll(k[:, -window:], shift=(t - window) % window, axis=1)
+                cv = jnp.roll(v[:, -window:], shift=(t - window) % window, axis=1)
+            elif window and t < window:
+                padw = window - t
+                ck = jnp.pad(k, ((0, 0), (0, padw), (0, 0), (0, 0)))
+                cv = jnp.pad(v, ((0, 0), (0, padw), (0, 0), (0, 0)))
+            else:
+                ck, cv = k, v
+            new_cache = KVCache(k=ck, v=cv, pos=jnp.asarray(t, jnp.int32))
+        return dense(out, params["wo"]), new_cache
+
+    # ----- decode: t == 1 new token against the cache -----
+    assert cache is not None and t == 1
+    pos = cache.pos  # scalar: index of the new token
+    q = apply_rope(q, pos[None][None, :], cfg.rope_theta)
+    k = apply_rope(k, pos[None][None, :], cfg.rope_theta)
+
+    s = cache.k.shape[1]
+    if window and window < 10**9:
+        slot = jnp.mod(pos, s)
+    else:
+        slot = pos
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+
+    # key positions: rotating buffer slots hold absolute position
+    slots = jnp.arange(s)
+    if window:
+        # slot i holds absolute pos: the latest p <= pos with p % s == i
+        kpos = pos - jnp.mod(pos - slots, s)
+    else:
+        kpos = slots
+    valid = (kpos <= pos) & (kpos >= 0)
+    bias = jnp.where(valid, 0.0, np.float32(-1e30))[None, :].astype(jnp.float32)
+
+    out = _sdpa(q, ck, cv, bias, n_rep, cfg.attn_logit_softcap)
+    out = out.reshape(b, t, cfg.q_dim)
+    new_cache = KVCache(k=ck, v=cv, pos=pos + 1)
+    return dense(out, params["wo"]), new_cache

@@ -1,0 +1,30 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+Per the brief, [audio] and [vlm] architectures specify the transformer
+backbone only; the ViT/SigLIP tower and the mel/conv feature extractor are
+stubs that emit deterministic embeddings of the right shape.  ``input_specs``
+in launch/dryrun.py uses the same shapes as ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def vision_embeddings(cfg: ArchConfig, batch: int, *, seed: int = 0,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    """Stub anyres patch embeddings: (B, num_vision_tokens, d_model)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(
+        key, (batch, cfg.num_vision_tokens, cfg.d_model)).astype(dtype) * 0.02
+
+
+def audio_frames(cfg: ArchConfig, batch: int, num_frames: int, *,
+                 seed: int = 0, dtype=jnp.float32) -> jnp.ndarray:
+    """Stub conv-extracted frame embeddings: (B, T, d_model)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (batch, num_frames, cfg.d_model)
+                             ).astype(dtype) * 0.02

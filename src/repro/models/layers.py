@@ -1,0 +1,110 @@
+"""Shared neural-net building blocks (pure functional JAX)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_dense(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP (optionally gated: SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], d_model, d_ff, dtype),
+         "down": init_dense(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = init_dense(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(params, x, act_name: str):
+    act = activation_fn(act_name)
+    up = dense(x, params["up"])
+    if "gate" in params:
+        up = act(dense(x, params["gate"])) * up
+    else:
+        up = act(up)
+    return dense(up, params["down"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, head_dim); positions: broadcastable to (..., T)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta), dtype=jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (..., T, hd/2)
+    angles = angles[..., None, :]                                    # (..., T, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray, scale: bool = True):
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(table.shape[-1]), dtype=x.dtype)
+    return x
+
+
+def logits_from_embedding(x: jnp.ndarray, table: jnp.ndarray,
+                          final_cap: float = 0.0) -> jnp.ndarray:
+    out = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    return softcap(out, final_cap)

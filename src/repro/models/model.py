@@ -1,0 +1,193 @@
+"""Model builder: init / forward / loss / decode over an ArchConfig.
+
+Parameter layout (the "scheduling view" DynaComm consumes)::
+
+    params = {
+      "embed":  {...}          # sched layer 0   (token table / input proj)
+      "layers": [block_0, ...] # sched layers 1..L
+      "final":  {...}          # sched layer L+1 (final norm + untied head)
+    }
+
+``num_sched_layers = cfg.num_layers + 2``; per-sched-layer byte counts and
+FLOPs come from ``profiles.py`` and feed the DP scheduler directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.layers import (embed, init_dense, init_embedding,
+                                 logits_from_embedding, rms_norm, dense)
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    kinds = cfg.layer_kinds()
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    p: Params = {"embed": {}, "layers": [], "final": {}}
+
+    if cfg.frontend != "audio":
+        p["embed"]["table"] = init_embedding(keys[0], cfg.vocab_size,
+                                             cfg.d_model, dtype)
+    else:
+        # audio: frames arrive pre-embedded (stub frontend); learn a proj
+        p["embed"]["in_proj"] = init_dense(keys[0], cfg.d_model, cfg.d_model,
+                                           dtype)
+
+    for i, kind in enumerate(kinds):
+        p["layers"].append(blocks.init_block(keys[1 + i], cfg, kind, dtype))
+
+    p["final"]["norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        p["final"]["head"] = init_dense(keys[-1], cfg.d_model, cfg.vocab_size,
+                                        dtype)
+    return p
+
+
+def _embed_inputs(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    """Produce the (B, T, d) input sequence from the modality-specific batch."""
+    if cfg.frontend == "audio":
+        return dense(batch["frames"], params["embed"]["in_proj"])
+    x = embed(batch["tokens"], params["embed"]["table"])
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([v, x], axis=1)
+    return x
+
+
+def _head(cfg: ArchConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final"]["norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return logits_from_embedding(x, params["embed"]["table"],
+                                     cfg.final_logit_softcap)
+    from repro.models.layers import softcap
+    return softcap(dense(x, params["final"]["head"]), cfg.final_logit_softcap)
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray], *,
+            mode: str = "train", caches: Optional[List[Any]] = None,
+            remat: bool = False, last_only: bool = False
+            ) -> Tuple[jnp.ndarray, Optional[List[Any]], jnp.ndarray]:
+    """Returns (logits, new_caches_or_None, aux_loss)."""
+    kinds = cfg.layer_kinds()
+    if mode == "decode":
+        x = embed(batch["token"], params["embed"]["table"]) \
+            if cfg.frontend != "audio" else None
+        if x is None:
+            raise ValueError("encoder-only model has no decode mode")
+    else:
+        x = _embed_inputs(cfg, params, batch)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: List[Any] = []
+    for i, kind in enumerate(kinds):
+        cache_i = caches[i] if caches is not None else None
+        apply = blocks.apply_block
+        if remat and mode == "train":
+            apply = jax.checkpoint(
+                lambda p, h, _cfg=cfg, _k=kind:
+                blocks.apply_block(p, h, _cfg, _k, mode="train", cache=None))
+            x, c, a = apply(params["layers"][i], x)
+        else:
+            x, c, a = apply(params["layers"][i], x, cfg, kind,
+                            mode=mode, cache=cache_i)
+        new_caches.append(c)
+        aux = aux + a
+
+    if last_only:
+        x = x[:, -1:]           # narrow before the (huge) vocab projection
+    logits = _head(cfg, params, x)
+    out_caches = new_caches if mode in ("prefill", "decode") else None
+    return logits, out_caches, aux
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.float32) -> List[Any]:
+    return [blocks.init_block_cache(cfg, kind, batch, max_len, dtype)
+            for kind in cfg.layer_kinds()]
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over positions with label >= 0.
+
+    Written in one-hot select-reduce form (not take_along_axis): a gather
+    along a vocab-sharded axis would force GSPMD to all-gather the *global*
+    logits; iota-compare-select partitions cleanly along both batch and
+    vocab axes.
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    x = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(x - m), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == safe[..., None], x, 0.0), axis=-1)
+    return jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_loss(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray],
+               *, aux_weight: float = 0.01, remat: bool = False) -> jnp.ndarray:
+    logits, _, aux = forward(cfg, params, batch, mode="train", remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # vision tokens prepended: pad labels with ignore for those positions
+        nv = logits.shape[1] - labels.shape[1]
+        pad = jnp.full(labels.shape[:1] + (nv,), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return cross_entropy(logits, labels) + aux_weight * aux
+
+
+def decode_step(cfg: ArchConfig, params: Params, token: jnp.ndarray,
+                caches: List[Any]) -> Tuple[jnp.ndarray, List[Any]]:
+    """serve_step: one token (B, 1) against the caches → (logits, caches)."""
+    logits, new_caches, _ = forward(cfg, params, {"token": token},
+                                    mode="decode", caches=caches)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# scheduling view
+# ---------------------------------------------------------------------------
+
+
+def num_sched_layers(cfg: ArchConfig) -> int:
+    return cfg.num_layers + 2
+
+
+def sched_layer_trees(params: Params) -> List[Any]:
+    """Per-sched-layer parameter pytrees (embed, blocks..., final)."""
+    return [params["embed"], *params["layers"], params["final"]]
+
+
+def params_from_sched_layers(trees: List[Any]) -> Params:
+    return {"embed": trees[0], "layers": list(trees[1:-1]), "final": trees[-1]}
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def sched_layer_bytes(cfg: ArchConfig, dtype=jnp.float32) -> List[int]:
+    """Per-sched-layer parameter bytes, via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    return [tree_bytes(t) for t in sched_layer_trees(shapes)]
+
+
+def param_count(cfg: ArchConfig) -> int:
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, jnp.float32), jax.random.PRNGKey(0))
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(shapes))

@@ -1,0 +1,374 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (RecurrentGemma/Griffin).
+
+All three expose a full-sequence form for train/prefill and an O(1)-state
+step for decode — the property that qualifies these families for the
+``long_500k`` shape.
+
+* mLSTM — matrix-memory LSTM (arXiv:2405.04517 eq. 19-27).  Training uses
+  the stabilized quadratic parallel form; decode carries (C, n, m).
+* sLSTM — scalar-memory LSTM with exponential gating and state
+  normalization; inherently sequential → ``lax.scan`` over time.
+* RG-LRU — real-gated linear recurrent unit (arXiv:2402.19427 §2.4) inside
+  the Griffin recurrent block (proj → temporal conv4 → RG-LRU → gated out).
+  Full-sequence form uses ``jax.lax.associative_scan``; a Pallas TPU kernel
+  (repro.kernels.rglru_scan) implements the same scan blockwise in VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, H, hd, hd) matrix memory
+    n: jnp.ndarray   # (B, H, hd) normalizer
+    m: jnp.ndarray   # (B, H) stabilizer
+
+
+def init_mlstm_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_dense(ks[0], d, di, dtype),
+        "up_gate": init_dense(ks[1], d, di, dtype),
+        "wq": init_dense(ks[2], di, di, dtype),
+        "wk": init_dense(ks[3], di, di, dtype),
+        "wv": init_dense(ks[4], di, di, dtype),
+        "wi": init_dense(ks[5], di, cfg.num_heads, dtype),
+        "wf": init_dense(ks[6], di, cfg.num_heads, dtype),
+        "down": init_dense(ks[7], di, d, dtype),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilized parallel form.  q,k,v: (B,H,T,hd); gates: (B,H,T)."""
+    hd = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))       # (B,H,T)
+    F = jnp.cumsum(logf, axis=-1)                                # Σ_{s<=t} log f_s
+    # D̃[t,s] = F_t - F_s + ĩ_s  for s<=t
+    dtil = F[..., :, None] - F[..., None, :] + i_gate.astype(jnp.float32)[..., None, :]
+    t = q.shape[2]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    dtil = jnp.where(causal, dtil, -np.inf)
+    m = jnp.max(dtil, axis=-1, keepdims=True)                    # (B,H,T,1)
+    dmat = jnp.exp(dtil - m)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    sd = s * dmat
+    norm = jnp.maximum(jnp.abs(jnp.sum(sd, axis=-1, keepdims=True)),
+                       jnp.exp(-m))
+    h = jnp.einsum("bhts,bhsd->bhtd", sd / norm, v.astype(jnp.float32))
+    return h.astype(q.dtype)
+
+
+# Sequences longer than this use the chunkwise form in train/prefill (the
+# full T×T decay matrix would blow HBM) — the TPU-native adaptation noted in
+# DESIGN.md: intra-chunk parallel (MXU-friendly c×c tiles), inter-chunk
+# recurrent carry (C, n, m), mathematically identical to the parallel form.
+MLSTM_CHUNK = 256
+
+
+def _mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk: int | None = None):
+    """q,k,v: (B,H,T,hd); gates: (B,H,T) → h: (B,H,T,hd), final state."""
+    if chunk is None:
+        chunk = MLSTM_CHUNK          # module attr: patchable for perf sweeps
+    b, h, t, hd = q.shape
+    while t % chunk:
+        chunk //= 2
+    n_c = t // chunk
+    scale = 1.0 / np.sqrt(hd)
+
+    def reshape_c(x):
+        return x.reshape(x.shape[0], x.shape[1], n_c, chunk, *x.shape[3:])
+
+    qc = reshape_c(q).transpose(2, 0, 1, 3, 4)      # (n_c,B,H,c,hd)
+    kc = reshape_c(k).transpose(2, 0, 1, 3, 4)
+    vc = reshape_c(v).transpose(2, 0, 1, 3, 4)
+    ic = i_gate.reshape(b, h, n_c, chunk).transpose(2, 0, 1, 3)  # (n_c,B,H,c)
+    fc_ = f_gate.reshape(b, h, n_c, chunk).transpose(2, 0, 1, 3)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        C, n, m_run = carry            # C:(B,H,hd,hd) n:(B,H,hd) m:(B,H)
+        qq, kk, vv, ii, ff = inp
+        qq32, kk32, vv32 = (x.astype(jnp.float32) for x in (qq, kk, vv))
+        lf = jax.nn.log_sigmoid(ff.astype(jnp.float32))       # (B,H,c)
+        a = jnp.cumsum(lf, axis=-1)                           # local decay to j
+        A = a[..., -1]                                        # (B,H)
+        ii32 = ii.astype(jnp.float32)
+
+        # intra-chunk scores D̃[t,j] = a_t - a_j + ĩ_j (j<=t)
+        dtil = a[..., :, None] - a[..., None, :] + ii32[..., None, :]
+        dtil = jnp.where(causal, dtil, -jnp.inf)
+        inter_log = a + m_run[..., None]                      # (B,H,c)
+        m_t = jnp.maximum(jnp.max(dtil, axis=-1), inter_log)  # (B,H,c)
+
+        d = jnp.exp(dtil - m_t[..., None])
+        s = jnp.einsum("bhtd,bhjd->bhtj", qq32, kk32) * scale
+        sd = s * d
+        num_intra = jnp.einsum("bhtj,bhjd->bhtd", sd, vv32)
+        den_intra = jnp.sum(sd, axis=-1)
+
+        w_inter = jnp.exp(inter_log - m_t)                    # (B,H,c)
+        num_inter = jnp.einsum("bhde,bhte->bhtd", C, qq32) * w_inter[..., None]
+        den_inter = jnp.einsum("bhd,bhtd->bht", n, qq32) * w_inter
+
+        denom = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h_out = (num_intra + num_inter) / denom[..., None]
+
+        # state update to chunk end
+        bj = A[..., None] - a + ii32                          # (B,H,c)
+        m_new = jnp.maximum(m_run + A, jnp.max(bj, axis=-1))
+        w_old = jnp.exp(m_run + A - m_new)
+        wj = jnp.exp(bj - m_new[..., None])
+        kfs = kk32 * scale
+        C_new = w_old[..., None, None] * C \
+            + jnp.einsum("bhj,bhjd,bhje->bhde", wj, vv32, kfs)
+        n_new = w_old[..., None] * n + jnp.einsum("bhj,bhjd->bhd", wj, kfs)
+        return (C_new, n_new, m_new), h_out.astype(q.dtype)
+
+    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    (C, n, m_run), hs = jax.lax.scan(body, (C0, n0, m0),
+                                     (qc, kc, vc, ic, fc_))
+    h_full = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, t, hd)
+    return h_full, MLSTMState(c=C, n=n, m=m_run)
+
+
+def _mlstm_step(q, k, v, i_gate, f_gate, state: MLSTMState):
+    """One decode step.  q,k,v: (B,H,hd); gates: (B,H)."""
+    hd = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    m_new = jnp.maximum(logf + state.m, i_gate.astype(jnp.float32))
+    f_p = jnp.exp(logf + state.m - m_new)
+    i_p = jnp.exp(i_gate.astype(jnp.float32) - m_new)
+    kf = k.astype(jnp.float32) / np.sqrt(hd)
+    c = f_p[..., None, None] * state.c \
+        + i_p[..., None, None] * jnp.einsum("bhd,bhe->bhde",
+                                            v.astype(jnp.float32), kf)
+    n = f_p[..., None] * state.n + i_p[..., None] * kf
+    num = jnp.einsum("bhde,bhe->bhd", c, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n,
+                                         q.astype(jnp.float32)))[..., None],
+                      jnp.exp(-m_new)[..., None])
+    h = (num / den).astype(q.dtype)
+    return h, MLSTMState(c=c, n=n, m=m_new)
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> MLSTMState:
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    hd = di // cfg.num_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, cfg.num_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, cfg.num_heads, hd), jnp.float32),
+        m=jnp.full((batch, cfg.num_heads), 0.0, jnp.float32),
+    )
+
+
+def apply_mlstm(params, x: jnp.ndarray, cfg: ArchConfig, *, mode: str,
+                state: Optional[MLSTMState] = None
+                ) -> Tuple[jnp.ndarray, Optional[MLSTMState]]:
+    b, t, _ = x.shape
+    h_heads = cfg.num_heads
+    up = dense(x, params["up"])
+    gate = jax.nn.silu(dense(x, params["up_gate"]))
+    di = up.shape[-1]
+    hd = di // h_heads
+
+    q = dense(up, params["wq"]).reshape(b, t, h_heads, hd).transpose(0, 2, 1, 3)
+    k = dense(up, params["wk"]).reshape(b, t, h_heads, hd).transpose(0, 2, 1, 3)
+    v = dense(up, params["wv"]).reshape(b, t, h_heads, hd).transpose(0, 2, 1, 3)
+    ig = dense(up, params["wi"]).transpose(0, 2, 1)      # (B, H, T)
+    fg = dense(up, params["wf"]).transpose(0, 2, 1)
+
+    if mode in ("train", "prefill"):
+        if t > MLSTM_CHUNK:
+            h, final_state = _mlstm_chunkwise(q, k, v, ig, fg)
+        else:
+            h = _mlstm_parallel(q, k, v, ig, fg)         # (B,H,T,hd)
+            final_state = None
+            if mode == "prefill":
+                _, final_state = _mlstm_chunkwise(q, k, v, ig, fg,
+                                                  chunk=min(t, MLSTM_CHUNK))
+        new_state = final_state if mode == "prefill" else None
+        out = h.transpose(0, 2, 1, 3).reshape(b, t, di)
+    else:
+        assert state is not None and t == 1
+        h, new_state = _mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                   ig[:, :, 0], fg[:, :, 0], state)
+        out = h.reshape(b, 1, di)
+
+    return dense(out * gate, params["down"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, D)
+    n: jnp.ndarray   # (B, D)
+    h: jnp.ndarray   # (B, D)
+    m: jnp.ndarray   # (B, D)
+
+
+def init_slstm_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    p = {}
+    for idx, gate in enumerate(("i", "f", "z", "o")):
+        p[f"w{gate}"] = init_dense(ks[idx], d, d, dtype)
+        p[f"r{gate}"] = init_dense(ks[4 + idx], d, d, dtype) * 0.1
+    p["down"] = init_dense(ks[8], d, d, dtype)
+    return p
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> SLSTMState:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z)
+
+
+def _slstm_step(params, x_t, s: SLSTMState):
+    def gate(name):
+        return (dense(x_t, params[f"w{name}"])
+                + dense(s.h.astype(x_t.dtype), params[f"r{name}"])
+                ).astype(jnp.float32)
+    itil, ftil = gate("i"), gate("f")
+    z = jnp.tanh(gate("z"))
+    o = jax.nn.sigmoid(gate("o"))
+    logf = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(logf + s.m, itil)
+    i_p = jnp.exp(itil - m_new)
+    f_p = jnp.exp(logf + s.m - m_new)
+    c = f_p * s.c + i_p * z
+    n = f_p * s.n + i_p
+    h = o * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def apply_slstm(params, x: jnp.ndarray, cfg: ArchConfig, *, mode: str,
+                state: Optional[SLSTMState] = None
+                ) -> Tuple[jnp.ndarray, Optional[SLSTMState]]:
+    b, t, d = x.shape
+    if mode in ("train", "prefill"):
+        s0 = init_slstm_state(cfg, b)
+        def body(s, x_t):
+            s2 = _slstm_step(params, x_t, s)
+            return s2, s2.h
+        final, hs = jax.lax.scan(body, s0, x.transpose(1, 0, 2))
+        out = hs.transpose(1, 0, 2).astype(x.dtype)
+        new_state = final if mode == "prefill" else None
+    else:
+        assert state is not None and t == 1
+        s2 = _slstm_step(params, x[:, 0], state)
+        out = s2.h[:, None].astype(x.dtype)
+        new_state = s2
+    return dense(out, params["down"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+_CONV_WIDTH = 4
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray      # (B, W) recurrent state
+    conv: jnp.ndarray   # (B, CONV_WIDTH-1, W) trailing inputs for the conv
+
+
+def init_rglru_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rglru_lru_width or d
+    ks = jax.random.split(key, 7)
+    # Λ init so a^c stays in (0.9, 0.999) — Griffin appendix
+    lam = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    lam_param = jnp.log(jnp.exp(-jnp.log(lam) / _RGLRU_C) - 1.0)  # softplus^-1
+    return {
+        "in_x": init_dense(ks[0], d, w, dtype),
+        "in_gate": init_dense(ks[1], d, w, dtype),
+        "conv": (jax.random.normal(ks[2], (_CONV_WIDTH, w)) * 0.1).astype(dtype),
+        "w_rgate": init_dense(ks[3], w, w, dtype),
+        "w_igate": init_dense(ks[4], w, w, dtype),
+        "lam": lam_param.astype(jnp.float32),
+        "out": init_dense(ks[6], w, d, dtype),
+    }
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    w = cfg.rglru_lru_width or cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, _CONV_WIDTH - 1, w), dtype))
+
+
+def _rglru_gates(params, u):
+    """u: (..., W) post-conv activations → (log_a, gated_input) float32."""
+    r = jax.nn.sigmoid(dense(u, params["w_rgate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(u, params["w_igate"]).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u.astype(jnp.float32)
+    return a, x_in
+
+
+def rglru_scan(a, x):
+    """h_t = a_t h_{t-1} + x_t along axis=1 via associative scan."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def apply_rglru(params, x: jnp.ndarray, cfg: ArchConfig, *, mode: str,
+                state: Optional[RGLRUState] = None, use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[RGLRUState]]:
+    b, t, _ = x.shape
+    gate = jax.nn.gelu(dense(x, params["in_gate"]), approximate=True)
+    u = dense(x, params["in_x"])                                   # (B, T, W)
+
+    if mode in ("train", "prefill"):
+        pad = jnp.zeros((b, _CONV_WIDTH - 1, u.shape[-1]), u.dtype)
+        upad = jnp.concatenate([pad, u], axis=1)
+        conv = sum(upad[:, i:i + t] * params["conv"][i].astype(u.dtype)
+                   for i in range(_CONV_WIDTH))
+        a, x_in = _rglru_gates(params, conv)
+        if use_kernel:
+            from repro.kernels.rglru_scan import ops as _kops
+            h = _kops.rglru_scan(a, x_in)
+        else:
+            h = rglru_scan(a, x_in)
+        new_state = None
+        if mode == "prefill":
+            new_state = RGLRUState(h=h[:, -1], conv=upad[:, -(_CONV_WIDTH - 1):])
+        out = h.astype(x.dtype)
+    else:
+        assert state is not None and t == 1
+        hist = jnp.concatenate([state.conv, u], axis=1)            # (B, 4, W)
+        conv = sum(hist[:, i] * params["conv"][i].astype(u.dtype)
+                   for i in range(_CONV_WIDTH))
+        a, x_in = _rglru_gates(params, conv)
+        h = a * state.h + x_in
+        new_state = RGLRUState(h=h, conv=hist[:, 1:])
+        out = h[:, None].astype(x.dtype)
+
+    return dense(out * gate, params["out"]), new_state

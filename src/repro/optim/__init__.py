@@ -1,0 +1,12 @@
+"""Optimizers built from scratch (optax is not installed in this container).
+
+Interface mirrors the usual gradient-transformation style::
+
+    opt = adamw(lr=1e-3)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+"""
+
+from repro.optim.optimizers import OptState, Optimizer, adamw, sgd
+
+__all__ = ["Optimizer", "OptState", "sgd", "adamw"]

@@ -1,0 +1,99 @@
+"""SGD(+momentum) and AdamW as pure pytree transformations."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment / momentum (pytree or None)
+    nu: Any          # second moment (pytree or None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Grads, OptState, Params], Tuple[Params, OptState]]
+
+
+def _zeros_like_f32(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = _zeros_like_f32(params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(grads, state, params):
+        def upd(g, p, m):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if momentum:
+                m = momentum * m + g
+                step_dir = m
+            else:
+                step_dir = g
+            new_p = (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype)
+            return new_p, m
+
+        if momentum:
+            out = jax.tree_util.tree_map(upd, grads, params, state.mu)
+            flat, treedef = jax.tree_util.tree_flatten(
+                out, is_leaf=lambda x: isinstance(x, tuple))
+            new_params = jax.tree_util.tree_unflatten(
+                treedef, [t[0] for t in flat])
+            new_mu = jax.tree_util.tree_unflatten(
+                treedef, [t[1] for t in flat])
+        else:
+            new_params = jax.tree_util.tree_map(
+                lambda g, p: upd(g, p, None)[0], grads, params)
+            new_mu = None
+        return new_params, OptState(step=state.step + 1, mu=new_mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_zeros_like_f32(params),
+                        nu=_zeros_like_f32(params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, p, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / b1c
+            vhat = v / b2c
+            step_dir = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step_dir = step_dir + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype)
+            return new_p, m, v
+
+        out = jax.tree_util.tree_map(upd, grads, params, state.mu, state.nu)
+        flat, treedef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+        new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+        new_mu = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+        new_nu = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
+        return new_params, OptState(step=step, mu=new_mu, nu=new_nu)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,3 @@
+from repro.serve.decode import batched_generate, build_decode_step, prefill
+
+__all__ = ["prefill", "build_decode_step", "batched_generate"]

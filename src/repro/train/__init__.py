@@ -1,0 +1,3 @@
+from repro.train.loop import TrainLoop, build_train_step
+
+__all__ = ["build_train_step", "TrainLoop"]

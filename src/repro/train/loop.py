@@ -1,0 +1,97 @@
+"""Training-step builders + a small host-side loop.
+
+``build_train_step`` produces the jit-able (params, opt_state, batch) →
+(params, opt_state, loss) function used both by the CPU examples and by the
+production dry-run (where it is lowered with GSPMD shardings).  Supports
+activation rematerialization and microbatched gradient accumulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.optim import Optimizer
+
+
+def build_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
+                     accum_steps: int = 1, remat: bool = True,
+                     aux_weight: float = 0.01) -> Callable:
+    def loss_fn(params, batch):
+        return model_lib.train_loss(cfg, params, batch,
+                                    aux_weight=aux_weight, remat=remat)
+
+    if accum_steps == 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, loss
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def reshape(x):
+            return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                             + x.shape[1:])
+        micro = jax.tree_util.tree_map(reshape, batch)
+
+        def body(carry, mb):
+            gacc, lacc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (gacc, lacc + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss_sum / accum_steps
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    """Host loop: data pipeline → jitted step → metrics/checkpoints."""
+
+    cfg: ArchConfig
+    optimizer: Optimizer
+    accum_steps: int = 1
+    remat: bool = False
+    log_every: int = 10
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+
+    def run(self, key, batches: Iterable[Dict[str, jnp.ndarray]],
+            num_steps: int, params: Any = None):
+        from repro.checkpoint import save_checkpoint
+        if params is None:
+            params = model_lib.init_params(self.cfg, key)
+        opt_state = self.optimizer.init(params)
+        step_fn = jax.jit(build_train_step(self.cfg, self.optimizer,
+                                           accum_steps=self.accum_steps,
+                                           remat=self.remat))
+        losses = []
+        t0 = time.perf_counter()
+        for i, batch in enumerate(batches):
+            if i >= num_steps:
+                break
+            params, opt_state, loss = step_fn(params, opt_state, batch)
+            losses.append(float(loss))
+            if self.log_every and (i + 1) % self.log_every == 0:
+                dt = time.perf_counter() - t0
+                print(f"step {i + 1:5d}  loss {losses[-1]:.4f}  "
+                      f"({dt / (i + 1):.3f}s/step)")
+            if (self.checkpoint_path and self.checkpoint_every
+                    and (i + 1) % self.checkpoint_every == 0):
+                save_checkpoint(self.checkpoint_path,
+                                {"params": params, "opt": opt_state},
+                                step=i + 1)
+        return params, opt_state, losses

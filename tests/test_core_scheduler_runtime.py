@@ -1,0 +1,84 @@
+"""Run-time scheduler behaviours (Section IV-C) and cost-vector plumbing."""
+
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core import (DynaCommScheduler, EdgeNetworkModel, TPUSystemModel,
+                        costs_from_profiles, random_costs)
+from repro.core.profiler import LayerProfile
+from repro.models.profiles import layer_profiles
+
+
+class TestSchedulerRuntime:
+    def test_rescheduling_interval(self):
+        c1 = random_costs(10, seed=0, dt=1e-3)
+        c2 = random_costs(10, seed=9, dt=1e-3, comm_scale=30.0)
+        sched = DynaCommScheduler(strategy="dynacomm", reschedule_every=3)
+        d0 = sched.decision_for_iteration(c1)
+        d1 = sched.decision_for_iteration(c2)   # iter 1: cached, ignores c2
+        assert d0 == d1
+        sched.decision_for_iteration(c2)        # iter 2: still cached
+        d3 = sched.decision_for_iteration(c2)   # iter 3: re-plans on c2
+        assert d3 != d0, "scheduler failed to adapt at the epoch boundary"
+
+    def test_reset(self):
+        c = random_costs(6, seed=1, dt=1e-3)
+        sched = DynaCommScheduler(reschedule_every=100)
+        sched.decision_for_iteration(c)
+        sched.reset()
+        assert sched._decision is None and sched._iter_seen == 0
+
+    def test_strategy_plumbs_through(self):
+        c = random_costs(8, seed=2, dt=5e-2)
+        seq = DynaCommScheduler(strategy="sequential").decision_for_iteration(c)
+        lbl = DynaCommScheduler(strategy="lbl").decision_for_iteration(c)
+        assert len(seq[0]) == 1 and len(lbl[0]) == 8
+
+
+class TestCostVectorSources:
+    def test_edge_vs_tpu_dt_regimes(self):
+        edge = EdgeNetworkModel()
+        tpu = TPUSystemModel(data_axis_size=16)
+        assert edge.dt > 1e-3           # ~14 ms
+        assert tpu.dt < 1e-4            # ~23 µs
+        assert edge.dt / tpu.dt > 100
+
+    def test_transfer_scales_with_shards(self):
+        small = TPUSystemModel(data_axis_size=2)
+        big = TPUSystemModel(data_axis_size=256)
+        b = np.array([1e9])
+        # (A-1)/A factor: 0.5 vs ~1.0
+        assert small.transfer_time(b)[0] < big.transfer_time(b)[0]
+
+    @pytest.mark.parametrize("arch", ["granite-3-2b", "grok-1-314b",
+                                      "recurrentgemma-2b"])
+    def test_profiles_to_costs_roundtrip(self, arch):
+        cfg = get_config(arch)
+        profs = layer_profiles(cfg, INPUT_SHAPES["train_4k"])
+        costs = costs_from_profiles(profs, net=TPUSystemModel())
+        assert costs.num_layers == cfg.num_layers + 2
+        assert float(np.sum(costs.fc)) > 0
+        assert float(np.sum(costs.pt)) > 0
+        # backward defaults to 2x forward
+        np.testing.assert_allclose(np.asarray(costs.bc),
+                                   2 * np.asarray(costs.fc))
+
+    def test_edge_requires_compute_rate(self):
+        profs = [LayerProfile(name="l", param_bytes=1e6, flops_fwd=1e9)]
+        with pytest.raises(ValueError):
+            costs_from_profiles(profs, net=EdgeNetworkModel())
+
+
+class TestTimelineViz:
+    def test_render_both_phases(self):
+        from repro.core.viz import render_timeline
+        from repro.core import schedule
+        c = random_costs(8, seed=0, dt=1e-3)
+        for strat in ("sequential", "lbl", "dynacomm"):
+            f, b = schedule(c, strat)
+            out_f = render_timeline(c, f, phase="forward")
+            out_b = render_timeline(c, b, phase="backward")
+            assert "link" in out_f and "compute" in out_f
+            assert "makespan" in out_b
+            assert len(out_f.splitlines()) == 3

@@ -1,0 +1,144 @@
+"""§Faithful: machine-checked versions of the paper's headline claims."""
+
+import numpy as np
+import pytest
+
+from benchmarks.edge_setup import cnn_costs
+from benchmarks.paper_figures import (MODELS, fig9a_batch_sensitivity,
+                                      fig9b_bandwidth_sensitivity,
+                                      total_iteration_reduction)
+from repro.core import (backward_time, bruteforce_backward,
+                        bruteforce_forward, dp_backward, dp_forward,
+                        evaluate, forward_time, schedule)
+from repro.core.baselines import lbl_forward
+
+
+class TestOptimalityOnPaperModels:
+    """Claim: "DynaComm manages to achieve optimal layer-wise scheduling
+    for ALL cases compared to competing strategies"."""
+
+    @pytest.mark.parametrize("model", MODELS)
+    @pytest.mark.parametrize("batch", [16, 32])
+    def test_dynacomm_beats_all_competitors(self, model, batch):
+        costs = cnn_costs(model, batch=batch)
+        times = {s: evaluate(costs, schedule(costs, s))["total"]
+                 for s in ("sequential", "lbl", "ibatch", "dynacomm")}
+        eps = 1e-9
+        assert times["dynacomm"] <= times["lbl"] + eps
+        assert times["dynacomm"] <= times["ibatch"] + eps
+        assert times["dynacomm"] <= times["sequential"] + eps
+
+    @pytest.mark.parametrize("model", MODELS)
+    def test_dp_is_exactly_optimal_truncated(self, model):
+        """Exhaustive check on a 14-layer prefix of each CNN's cost table
+        (full tables are beyond brute force, as the paper notes)."""
+        full = cnn_costs(model, batch=32)
+        from repro.core import LayerCosts
+        costs = LayerCosts(pt=full.pt[:14], fc=full.fc[:14],
+                           bc=full.bc[:14], gt=full.gt[:14], dt=full.dt)
+        assert dp_forward(costs).time == pytest.approx(
+            bruteforce_forward(costs)[1], rel=1e-9)
+        assert dp_backward(costs).time == pytest.approx(
+            bruteforce_backward(costs)[1], rel=1e-9)
+
+
+class TestReductionMagnitudes:
+    """Claim: total iteration time reduced by up to 41.92%; per-model
+    reductions in the 28-47% band under the paper's testbed constants."""
+
+    def test_total_reduction_band(self):
+        rows = total_iteration_reduction()
+        best = max(r["dynacomm_reduced_pct"] for r in rows)
+        assert 35.0 <= best <= 55.0, f"headline reduction {best}%"
+        for r in rows:
+            assert r["dynacomm_reduced_pct"] >= 25.0, r
+
+    def test_vgg19_near_paper_numbers(self):
+        """Paper: VGG-19 total reduction 41.10% (bs 32)."""
+        rows = [r for r in total_iteration_reduction()
+                if r["model"] == "vgg19" and r["batch"] == 32]
+        assert abs(rows[0]["dynacomm_reduced_pct"] - 41.1) < 8.0
+
+
+class TestIBatchPathology:
+    """Claim (Fig. 5c): iBatch sometimes performs worse than plain LBL."""
+
+    def test_ibatch_loses_to_lbl_somewhere(self):
+        hits = 0
+        for model in MODELS:
+            for batch in (16, 32):
+                costs = cnn_costs(model, batch=batch)
+                t_ib = evaluate(costs, schedule(costs, "ibatch"))["total"]
+                t_lbl = evaluate(costs, schedule(costs, "lbl"))["total"]
+                if t_ib > t_lbl + 1e-9:
+                    hits += 1
+        assert hits >= 1, "iBatch never lost to LBL on the paper models"
+
+    def test_dynacomm_never_loses(self):
+        for model in MODELS:
+            for batch in (8, 16, 24, 32, 48):
+                costs = cnn_costs(model, batch=batch)
+                t = {s: evaluate(costs, schedule(costs, s))["total"]
+                     for s in ("lbl", "ibatch", "dynacomm")}
+                assert t["dynacomm"] <= min(t.values()) + 1e-9
+
+
+class TestSensitivity:
+    """Fig. 9: reduction peaks where compute/comm are balanced."""
+
+    def test_batch_sweep_has_interior_peak_or_plateau(self):
+        rows = [r for r in fig9a_batch_sensitivity()
+                if r["strategy"] == "dynacomm"]
+        vals = [r["reduced_pct"] for r in rows]
+        # reduction should not be monotone increasing across the whole sweep
+        assert max(vals) >= vals[-1]
+
+    def test_bandwidth_nonmonotone(self):
+        """Paper: poor at 1 Gbps, peak at 5 Gbps, lower again at 10 Gbps."""
+        rows = {(r["bandwidth_gbps"]): r["reduced_pct"]
+                for r in fig9b_bandwidth_sensitivity()
+                if r["strategy"] == "dynacomm"}
+        assert rows[5] > rows[1]
+        assert rows[5] > rows[10]
+
+
+class TestComplexity:
+    """Fig. 12 / Section IV-B4: O(L^3) scheduling, negligible vs iteration."""
+
+    def test_cubic_growth(self):
+        import time
+        from repro.core import random_costs
+        ts = {}
+        for L in (64, 128, 256):
+            costs = random_costs(L, seed=0, dt=1e-3)
+            t0 = time.perf_counter()
+            dp_forward(costs)
+            ts[L] = time.perf_counter() - t0
+        # doubling L should multiply time by ~8 (allow 3x-32x: numpy consts)
+        r1 = ts[128] / ts[64]
+        r2 = ts[256] / ts[128]
+        assert 2.0 < r2 < 40.0 and r2 > r1 * 0.5
+
+    def test_scheduling_negligible_vs_iteration(self):
+        """Table I / II: scheduling cost ≪ iteration time on paper models."""
+        import time
+        for model in MODELS:
+            costs = cnn_costs(model, batch=32)
+            t0 = time.perf_counter()
+            dp_forward(costs)
+            dp_backward(costs)
+            sched_t = time.perf_counter() - t0
+            iter_t = evaluate(costs, schedule(costs, "dynacomm"))["total"]
+            assert sched_t < 0.05 * iter_t, (model, sched_t, iter_t)
+
+
+class TestSchedulerHiding:
+    """Section IV-C: the scheduler fits in the idle window (Δt + gt^1)."""
+
+    def test_idle_window_hides_scheduling(self):
+        from repro.core import DynaCommScheduler
+        for model in MODELS:
+            costs = cnn_costs(model, batch=32)
+            sched = DynaCommScheduler(strategy="dynacomm")
+            sched.decision_for_iteration(costs)
+            assert sched.scheduling_overhead_hidden(costs), model

@@ -1,0 +1,98 @@
+"""System-invariant property tests (hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LayerCosts, backward_time, dp_backward, dp_forward,
+                        forward_time)
+from repro.core.baselines import lbl_backward, lbl_forward
+from repro.core.costmodel import (backward_segments_from_g,
+                                  forward_segments_from_p,
+                                  g_from_backward_segments,
+                                  p_from_forward_segments)
+
+
+def _mk(pt, fc, bc, gt, dt):
+    return LayerCosts(pt=np.array(pt), fc=np.array(fc), bc=np.array(bc),
+                      gt=np.array(gt), dt=dt)
+
+
+vec = lambda L: st.lists(st.floats(0.0, 100.0), min_size=L, max_size=L)
+inst = st.integers(2, 8).flatmap(
+    lambda L: st.tuples(vec(L), vec(L), vec(L), vec(L), st.floats(0.0, 10.0)))
+
+
+class TestSchedulingInvariants:
+    @settings(max_examples=100, deadline=None)
+    @given(inst, st.floats(0.1, 10.0))
+    def test_optimum_scales_linearly(self, tup, lam):
+        """T*(λ·costs) == λ·T*(costs) — the objective is 1-homogeneous."""
+        pt, fc, bc, gt, dt = tup
+        c1 = _mk(pt, fc, bc, gt, dt)
+        c2 = c1.scaled(compute=lam, comm=lam, dt=lam * dt)
+        t1 = dp_forward(c1).time
+        t2 = dp_forward(c2).time
+        assert t2 == pytest.approx(lam * t1, rel=1e-9, abs=1e-9)
+
+    @settings(max_examples=100, deadline=None)
+    @given(inst)
+    def test_zero_dt_makes_lbl_optimal(self, tup):
+        """With Δt = 0, splitting a segment never hurts ⇒ LBL is optimal."""
+        pt, fc, bc, gt, _ = tup
+        c = _mk(pt, fc, bc, gt, 0.0)
+        L = c.num_layers
+        assert forward_time(c, lbl_forward(L)) == pytest.approx(
+            dp_forward(c).time, rel=1e-9, abs=1e-9)
+        assert backward_time(c, lbl_backward(L)) == pytest.approx(
+            dp_backward(c).time, rel=1e-9, abs=1e-9)
+
+    @settings(max_examples=100, deadline=None)
+    @given(inst)
+    def test_forward_backward_duality(self, tup):
+        """The backward problem is the forward problem under time reversal:
+        reversing a backward schedule turns the push of the last segment
+        into the first pull, so T*_bwd(bc, gt) == T*_fwd(pt=gt, fc=bc)
+        (indices unreversed — layer 1's push, executed last, maps to
+        layer 1's pull, executed first)."""
+        pt, fc, bc, gt, dt = tup
+        c = _mk(pt, fc, bc, gt, dt)
+        dual = _mk(gt, bc, bc, gt, dt)
+        assert dp_backward(c).time == pytest.approx(
+            dp_forward(dual).time, rel=1e-9, abs=1e-9)
+
+    @settings(max_examples=100, deadline=None)
+    @given(inst, st.floats(0.0, 5.0))
+    def test_dt_monotone(self, tup, extra):
+        """Raising Δt can never reduce the optimal time."""
+        pt, fc, bc, gt, dt = tup
+        c1 = _mk(pt, fc, bc, gt, dt)
+        c2 = _mk(pt, fc, bc, gt, dt + extra)
+        assert dp_forward(c2).time >= dp_forward(c1).time - 1e-9
+
+    @settings(max_examples=100, deadline=None)
+    @given(inst)
+    def test_lower_bounds(self, tup):
+        """T*_fwd ≥ max(total compute, Δt + total comm) — either stream is
+        a lower bound."""
+        pt, fc, bc, gt, dt = tup
+        c = _mk(pt, fc, bc, gt, dt)
+        t = dp_forward(c).time
+        assert t >= float(np.sum(c.fc)) - 1e-9
+        assert t >= dt + float(np.sum(c.pt)) - 1e-9
+
+
+class TestDecisionEncodings:
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 12).flatmap(
+        lambda L: st.lists(st.integers(0, 1), min_size=L - 1, max_size=L - 1)))
+    def test_p_roundtrip(self, p):
+        p = tuple(p)
+        assert p_from_forward_segments(forward_segments_from_p(p)) == p
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 12).flatmap(
+        lambda L: st.lists(st.integers(0, 1), min_size=L - 1, max_size=L - 1)))
+    def test_g_roundtrip(self, g):
+        g = tuple(g)
+        assert g_from_backward_segments(backward_segments_from_g(g)) == g

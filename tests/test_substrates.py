@@ -1,0 +1,164 @@
+"""Optimizers, checkpointing, data pipeline, train loop, serving."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticCIFAR, SyntheticText
+from repro.models import init_params, train_loss
+from repro.models.cnn import small_cnn_init, small_cnn_loss
+from repro.optim import adamw, sgd
+from repro.train.loop import TrainLoop, build_train_step
+
+
+class TestOptimizers:
+    def test_sgd_matches_manual(self):
+        params = {"w": jnp.array([1.0, 2.0])}
+        grads = {"w": jnp.array([0.5, -1.0])}
+        opt = sgd(lr=0.1)
+        state = opt.init(params)
+        new, _ = opt.update(grads, state, params)
+        np.testing.assert_allclose(np.asarray(new["w"]), [0.95, 2.1])
+
+    def test_sgd_momentum(self):
+        params = {"w": jnp.zeros(1)}
+        grads = {"w": jnp.ones(1)}
+        opt = sgd(lr=1.0, momentum=0.9)
+        state = opt.init(params)
+        p1, state = opt.update(grads, state, params)
+        p2, state = opt.update(grads, state, p1)
+        # v1 = 1, v2 = 1.9 → p = -(1 + 1.9)
+        np.testing.assert_allclose(np.asarray(p2["w"]), [-2.9])
+
+    def test_adamw_first_step_is_lr_sized(self):
+        params = {"w": jnp.array([0.0])}
+        grads = {"w": jnp.array([3.0])}
+        opt = adamw(lr=1e-2)
+        state = opt.init(params)
+        new, _ = opt.update(grads, state, params)
+        # bias-corrected first step ≈ lr * sign(g)
+        np.testing.assert_allclose(np.asarray(new["w"]), [-1e-2], rtol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(1e-4, 1e-1), st.integers(0, 5))
+    def test_adamw_descends_quadratic(self, lr, seed):
+        key = jax.random.PRNGKey(seed)
+        target = jax.random.normal(key, (8,))
+        params = {"w": jnp.zeros(8)}
+        opt = adamw(lr=lr)
+        state = opt.init(params)
+
+        def loss_fn(p):
+            return jnp.sum((p["w"] - target) ** 2)
+
+        l0 = float(loss_fn(params))
+        for _ in range(50):
+            g = jax.grad(loss_fn)(params)
+            params, state = opt.update(g, state, params)
+        assert float(loss_fn(params)) < l0
+
+    def test_weight_decay_shrinks(self):
+        params = {"w": jnp.array([10.0])}
+        grads = {"w": jnp.array([0.0])}
+        opt = adamw(lr=0.1, weight_decay=0.1)
+        state = opt.init(params)
+        new, _ = opt.update(grads, state, params)
+        assert float(new["w"][0]) < 10.0
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        cfg = get_config("granite-3-2b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw(1e-3)
+        state = {"params": params, "opt": opt.init(params)}
+        path = str(tmp_path / "ckpt.npz")
+        save_checkpoint(path, state, step=42)
+        restored, step = load_checkpoint(path, state)
+        assert step == 42
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "c.npz")
+        save_checkpoint(path, {"w": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            load_checkpoint(path, {"w": jnp.zeros((3, 2))})
+
+
+class TestTrainLoop:
+    def test_loss_descends_small_transformer(self):
+        cfg = get_config("granite-3-2b").reduced()
+        pipe = SyntheticText(cfg.vocab_size, 32, 8, seed=0)
+        loop = TrainLoop(cfg=cfg, optimizer=adamw(1e-3), log_every=0)
+        _, _, losses = loop.run(jax.random.PRNGKey(0), iter(pipe),
+                                num_steps=20)
+        assert losses[-1] < losses[0]
+
+    def test_accum_steps_match_full_batch(self):
+        """Gradient accumulation over k microbatches == one big batch."""
+        cfg = get_config("granite-3-2b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = sgd(0.1)
+        batch = SyntheticText(cfg.vocab_size, 16, 8, seed=1).batch(0)
+        s1 = build_train_step(cfg, opt, accum_steps=1, remat=False)
+        s4 = build_train_step(cfg, opt, accum_steps=4, remat=False)
+        p1, _, l1 = jax.jit(s1)(params, opt.init(params), batch)
+        p4, _, l4 = jax.jit(s4)(params, opt.init(params), batch)
+        np.testing.assert_allclose(float(l1), float(l4), rtol=1e-5)
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+
+    def test_remat_matches_no_remat(self):
+        cfg = get_config("gemma2-2b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = SyntheticText(cfg.vocab_size, 16, 4, seed=2).batch(0)
+        g1 = jax.grad(lambda p: train_loss(cfg, p, batch, remat=False))(params)
+        g2 = jax.grad(lambda p: train_loss(cfg, p, batch, remat=True))(params)
+        for a, b in zip(jax.tree_util.tree_leaves(g1),
+                        jax.tree_util.tree_leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)
+
+
+class TestServing:
+    def test_batched_generate(self):
+        from repro.serve.decode import batched_generate
+        cfg = get_config("gemma2-2b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0,
+                                     cfg.vocab_size)
+        out = batched_generate(cfg, params, prompts, max_new_tokens=5)
+        assert out.shape == (3, 5)
+        assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+
+
+class TestSmallCNN:
+    def test_cnn_trains(self):
+        params = small_cnn_init(jax.random.PRNGKey(0))
+        pipe = SyntheticCIFAR(batch_size=16, seed=0)
+        opt = sgd(0.05, momentum=0.9)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(params, state, images, labels):
+            loss, grads = jax.value_and_grad(small_cnn_loss)(params, images,
+                                                             labels)
+            params, state = opt.update(grads, state, params)
+            return params, state, loss
+
+        losses = []
+        for i in range(20):
+            b = pipe.batch(i)
+            params, state, loss = step(params, state, b["images"], b["labels"])
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
