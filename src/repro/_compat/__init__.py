@@ -1,0 +1,1 @@
+"""Dependency fallbacks for hermetic environments (see conftest.py)."""

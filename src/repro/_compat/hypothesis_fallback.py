@@ -1,0 +1,152 @@
+"""Minimal stand-in for the slice of the `hypothesis` API this repo's tests
+use, for containers where the real package cannot be installed.
+
+The real dependency is declared in ``pyproject.toml`` (extra ``test``) and is
+always preferred: ``conftest.py`` calls :func:`install` only when
+``import hypothesis`` fails.  The fallback runs each ``@given`` test against
+``max_examples`` deterministically-seeded samples (seeded per test, endpoints
+included with elevated probability) — no shrinking, no example database, but
+the property tests here assert for-all invariants of pure numpy code, so any
+legal sample is a valid probe.
+
+Supported surface: ``given``, ``settings(max_examples=, deadline=)``, and
+``strategies.{floats, integers, lists, tuples, booleans, just, sampled_from}``
+with ``.map`` / ``.filter`` / ``.flatmap``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._draw(rng)))
+
+    def flatmap(self, f):
+        return Strategy(lambda rng: f(self._draw(rng))._draw(rng))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                x = self._draw(rng)
+                if pred(x):
+                    return x
+            raise RuntimeError("filter predicate rejected 1000 samples")
+        return Strategy(draw)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return lo + (hi - lo) * rng.random()
+    return Strategy(draw)
+
+
+def integers(min_value=0, max_value=2 ** 31 - 1):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def lists(elements, *, min_size=0, max_size=None, **_kw):
+    hi = min_size + 10 if max_size is None else max_size
+
+    def draw(rng):
+        n = int(rng.integers(min_size, hi + 1))
+        return [elements._draw(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def tuples(*strategies):
+    return Strategy(lambda rng: tuple(s._draw(rng) for s in strategies))
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def randoms(note_method_calls=False, use_true_random=False, **_kw):
+    import random as _random
+    return Strategy(lambda rng: _random.Random(int(rng.integers(0, 2 ** 32))))
+
+
+def given(*strategies):
+    def decorate(fn):
+        # Like real hypothesis, strategies bind to the RIGHTMOST params —
+        # by name, so fixtures passed by pytest as kwargs cannot collide.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        kept = params[:len(params) - len(strategies)]
+        bound_names = [p.name for p in params[len(params) - len(strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(
+                zlib.adler32(fn.__qualname__.encode()))
+            for _ in range(n):
+                example = {name: s._draw(rng)
+                           for name, s in zip(bound_names, strategies)}
+                try:
+                    fn(*args, **kwargs, **example)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (hypothesis fallback): "
+                        f"{example!r}") from e
+        wrapper._is_hypothesis_fallback = True
+        # pytest must not mistake example-bound params for fixtures: hide
+        # __wrapped__ and expose a signature without the trailing params.
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_kw):
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install() -> None:
+    """Register the fallback as ``hypothesis`` in ``sys.modules``."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    mod.given, mod.settings = given, settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "lists", "tuples", "booleans", "just",
+                 "sampled_from", "randoms"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,7 @@
+"""Pallas API compatibility aliases (jax renamed these across versions)."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 exposes this as TPUCompilerParams, newer jax as CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

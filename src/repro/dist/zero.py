@@ -1,0 +1,247 @@
+"""DynaComm-bucketed ZeRO trainer.
+
+The TPU-native adaptation of the paper's pull/push procedures: a
+``BucketPlan`` (from ``repro.core.buckets``) drives a data-parallel training
+step in which
+
+* parameters live sharded as one padded flat float32 buffer per sched layer
+  (``state["flat_params"][l]`` has global shape ``(spec.padded,)`` split over
+  the ``data`` axis — ZeRO: optimizer state and master weights are never
+  replicated);
+* the forward phase launches **exactly one all-gather per forward bucket**
+  (the paper's parameter pull of a transmission segment);
+* the backward phase launches **exactly one reduce-scatter per backward
+  bucket** (the gradient push), walking layers top-down with per-layer VJPs
+  so bucket boundaries are real program structure, not a post-hoc rewrite;
+* with ``zero3=True`` the gathered weights are *not* kept alive across the
+  forward/backward boundary: every backward bucket that contains a middle
+  layer re-pulls its parameters with one extra all-gather (first/last sched
+  layers are exempt — the head is hot at the fwd→bwd boundary and the
+  embedding VJP needs no weights).
+
+The step is built with ``shard_map`` so the collectives above are the
+*only* all-gathers / reduce-scatters in the compiled HLO —
+``tests/test_dist.py`` asserts the counts against the plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.buckets import BucketPlan, flat_layer_order
+from repro.dist.collectives import (FlatSpec, flatten_tree, gather_bucket,
+                                    make_flat_spec, reduce_scatter_bucket,
+                                    unflatten_tree)
+from repro.models import blocks as blocks_lib
+from repro.models import model as model_lib
+from repro.optim import Optimizer
+
+
+@dataclasses.dataclass
+class ZeroTrainer:
+    """Bucketed ZeRO data-parallel trainer over a 1-D ``data`` mesh axis."""
+
+    cfg: ArchConfig
+    mesh: Mesh
+    plan: BucketPlan
+    optimizer: Optimizer
+    zero3: bool = False
+    axis_name: str = "data"
+    aux_weight: float = 0.01
+
+    def __post_init__(self):
+        if self.axis_name not in self.mesh.axis_names:
+            raise ValueError(f"mesh has no {self.axis_name!r} axis: "
+                             f"{self.mesh.axis_names}")
+        self.axis_size = int(self.mesh.shape[self.axis_name])
+        self.num_layers = model_lib.num_sched_layers(self.cfg)
+        self._validate_plan()
+
+        shapes = jax.eval_shape(
+            lambda k: model_lib.init_params(self.cfg, k, jnp.float32),
+            jax.random.PRNGKey(0))
+        self.specs: List[FlatSpec] = [
+            make_flat_spec(tree, self.axis_size)
+            for tree in model_lib.sched_layer_trees(shapes)]
+        self._kinds = self.cfg.layer_kinds()
+
+    # ------------------------------------------------------------------
+    # construction helpers
+    # ------------------------------------------------------------------
+
+    def _validate_plan(self) -> None:
+        Ls = self.num_layers
+        fwd = flat_layer_order(self.plan.forward)
+        bwd = flat_layer_order(self.plan.backward)
+        if fwd != tuple(range(Ls)):
+            raise ValueError(f"forward buckets {self.plan.forward} do not "
+                             f"pull layers 0..{Ls - 1} in order")
+        if bwd != tuple(range(Ls - 1, -1, -1)):
+            raise ValueError(f"backward buckets {self.plan.backward} do not "
+                             f"push layers {Ls - 1}..0 in order")
+
+    def _flat_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.axis_name))
+
+    def _replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # ------------------------------------------------------------------
+    # state
+    # ------------------------------------------------------------------
+
+    def _make_state(self, key) -> Dict[str, Any]:
+        params = model_lib.init_params(self.cfg, key, jnp.float32)
+        flats = [flatten_tree(tree, spec) for tree, spec in
+                 zip(model_lib.sched_layer_trees(params), self.specs)]
+        return {"flat_params": flats,
+                "opt": self.optimizer.init(flats),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def init_state(self, key) -> Dict[str, Any]:
+        """Init identical to ``init_params(cfg, key)`` then flatten + shard."""
+        shapes = jax.eval_shape(self._make_state, key)
+        flat_sh, rep_sh = self._flat_sharding(), self._replicated()
+        out_sh = jax.tree_util.tree_map(
+            lambda s: flat_sh if s.ndim == 1 else rep_sh, shapes)
+        return jax.jit(self._make_state, out_shardings=out_sh)(key)
+
+    # ------------------------------------------------------------------
+    # per-sched-layer applies (closed over cfg; used forward AND in VJPs)
+    # ------------------------------------------------------------------
+
+    def _apply_embed(self, embed_tree, batch):
+        return model_lib._embed_inputs(self.cfg, {"embed": embed_tree}, batch)
+
+    def _apply_block(self, block_tree, x, kind):
+        y, _, aux = blocks_lib.apply_block(block_tree, x, self.cfg, kind,
+                                           mode="train", cache=None)
+        return y, aux
+
+    def _apply_final(self, final_tree, embed_tree, x, batch):
+        """Final norm + (possibly embedding-tied) head + masked CE."""
+        logits = model_lib._head(
+            self.cfg, {"embed": embed_tree, "final": final_tree}, x)
+        labels = batch["labels"]
+        if self.cfg.frontend == "vision":
+            nv = logits.shape[1] - labels.shape[1]
+            pad = jnp.full(labels.shape[:1] + (nv,), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return model_lib.cross_entropy(logits, labels)
+
+    # ------------------------------------------------------------------
+    # the train step
+    # ------------------------------------------------------------------
+
+    def build_train_step(self):
+        """Returns jit-able ``step(state, batch) -> (state, mean_loss)``."""
+        state_shapes = jax.eval_shape(self._make_state, jax.random.PRNGKey(0))
+        state_specs = jax.tree_util.tree_map(
+            lambda s: P(self.axis_name) if s.ndim == 1 else P(), state_shapes)
+
+        def step(state, batch):
+            batch_specs = jax.tree_util.tree_map(
+                lambda b: P(self.axis_name, *([None] * (b.ndim - 1))), batch)
+            fn = shard_map(self._local_step, mesh=self.mesh,
+                           in_specs=(state_specs, batch_specs),
+                           out_specs=(state_specs, P()),
+                           check_rep=False)
+            return fn(state, batch)
+
+        return step
+
+    def _local_step(self, state, batch):
+        Ls, kinds = self.num_layers, self._kinds
+        shards = list(state["flat_params"])
+
+        # ---- pull phase: one all-gather per forward bucket --------------
+        full: Dict[int, Any] = {}
+        for bucket in self.plan.forward:
+            full.update(gather_bucket(shards, self.specs, bucket,
+                                      self.axis_name))
+
+        # ---- forward, saving each layer's input activation --------------
+        acts: Dict[int, jnp.ndarray] = {}
+        aux = jnp.zeros((), jnp.float32)
+        h = self._apply_embed(full[0], batch)
+        for l in range(1, Ls - 1):
+            acts[l] = h
+            h, a = self._apply_block(full[l], h, kinds[l - 1])
+            aux = aux + a
+        acts[Ls - 1] = h
+        ce = self._apply_final(full[Ls - 1], full[0], h, batch)
+        loss_local = ce + self.aux_weight * aux
+
+        # ---- ZeRO-3: re-pull mid-layer buckets for the backward ---------
+        # The barrier keeps the re-gather a distinct program point from the
+        # forward pull (so the forward copies are dead after their last
+        # forward use and the re-gather cannot be folded into them).
+        regathered: Dict[int, Any] = {}
+        if self.zero3:
+            barred = list(jax.lax.optimization_barrier(tuple(shards)))
+            for bucket in self.plan.backward:
+                if any(0 < l < Ls - 1 for l in bucket):
+                    regathered.update(gather_bucket(barred, self.specs,
+                                                    bucket, self.axis_name))
+
+        # ---- backward: per-layer VJPs, one reduce-scatter per bucket ----
+        one = jnp.ones((), jnp.float32)
+        aux_ct = jnp.asarray(self.aux_weight, jnp.float32)
+        grad_shards: List[Optional[jnp.ndarray]] = [None] * Ls
+        embed_from_head = None     # tied-head contribution to the embedding
+        ct_h = None                # cotangent w.r.t. the current activation
+        for bucket in self.plan.backward:
+            bucket_grads: Dict[int, Any] = {}
+            for l in bucket:       # descending layer order within the bucket
+                p_l = regathered.get(l, full[l])
+                if l == Ls - 1:
+                    _, vjp = jax.vjp(
+                        lambda pf, pe, hh: self._apply_final(pf, pe, hh,
+                                                             batch),
+                        p_l, full[0], acts[l])
+                    g_final, embed_from_head, ct_h = vjp(one)
+                    bucket_grads[l] = g_final
+                elif l == 0:
+                    _, vjp = jax.vjp(
+                        lambda pe: self._apply_embed(pe, batch), p_l)
+                    (g_embed,) = vjp(ct_h)
+                    bucket_grads[l] = jax.tree_util.tree_map(
+                        jnp.add, g_embed, embed_from_head)
+                else:
+                    kind = kinds[l - 1]
+                    _, vjp = jax.vjp(
+                        lambda p, hh, _k=kind: self._apply_block(p, hh, _k),
+                        p_l, acts[l])
+                    g_block, ct_h = vjp((ct_h, aux_ct))
+                    bucket_grads[l] = g_block
+            pushed = reduce_scatter_bucket(bucket_grads, self.specs, bucket,
+                                           self.axis_name)
+            for l, g in pushed.items():
+                grad_shards[l] = g / self.axis_size     # sum → mean
+
+        # ---- sharded optimizer update (ZeRO: on local shards only) ------
+        new_flats, new_opt = self.optimizer.update(grad_shards, state["opt"],
+                                                   shards)
+        loss = jax.lax.pmean(loss_local, self.axis_name)
+        new_state = {"flat_params": new_flats, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, loss
+
+    # ------------------------------------------------------------------
+    # interop
+    # ------------------------------------------------------------------
+
+    def params_from_state(self, state) -> Any:
+        """Materialize the canonical (unsharded) param pytree from a state —
+        checkpoint/eval interop, not part of the hot path."""
+        trees = []
+        for flat, spec in zip(state["flat_params"], self.specs):
+            trees.append(unflatten_tree(jnp.asarray(flat), spec))
+        return model_lib.params_from_sched_layers(trees)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro._compat.pallas import CompilerParams as _CompilerParams
+
 DEFAULT_BT = 128
 DEFAULT_BW = 128
 
@@ -64,7 +66,7 @@ def rglru_scan_pallas(a: jnp.ndarray, x: jnp.ndarray, *,
         out_specs=pl.BlockSpec((None, bt, bw), lambda bi, wi, ti: (bi, ti, wi)),
         out_shape=jax.ShapeDtypeStruct((b, t, w), a.dtype),
         scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, x)

@@ -32,6 +32,15 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
 _OPERAND_RE = re.compile(r"%?([\w.\-]+)")
 
 
+def cost_analysis_dict(compiled) -> Dict:
+    """`Compiled.cost_analysis()` returns a dict or a one-element list of
+    dicts depending on the jax version — normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_bytes(type_str: str) -> int:
     """Bytes of an HLO type string, e.g. 'bf16[8,128]{1,0}' or a tuple."""
     total = 0
@@ -49,9 +58,11 @@ def _shape_bytes(type_str: str) -> int:
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-op-kind operand bytes summed over the module (per device).
 
-    The HLO printer references operands by name, so first build a
-    name → output-type map over all instruction definitions, then resolve
-    each collective's operand names against it.
+    Depending on the XLA version the printer writes operands either bare
+    (``all-gather(%p0)``) or with their type inline
+    (``all-gather(f32[1,16]{1,0} %bitcast)``).  Inline types are parsed
+    directly; bare names are resolved against a name → output-type map
+    built over all instruction definitions.
     """
     defs: Dict[str, str] = {}
     found = []
@@ -77,11 +88,15 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     out = {k: 0 for k in _COLLECTIVES}
     counts = {k: 0 for k in _COLLECTIVES}
     for kind, operands in found:
-        total = 0
-        for op in operands.split(","):
-            m = _OPERAND_RE.match(op.strip())
-            if m and m.group(1) in defs:
-                total += _shape_bytes(defs[m.group(1)])
+        # inline style: every operand carries its own "dtype[dims]{...}"
+        total = _shape_bytes(operands)
+        if total == 0:
+            # bare style: resolve "%name" operands against the def map
+            # (names contain no commas, so the split is safe here)
+            for op in operands.split(","):
+                m = _OPERAND_RE.match(op.strip())
+                if m and m.group(1) in defs:
+                    total += _shape_bytes(defs[m.group(1)])
         out[kind] += total
         counts[kind] += 1
     out["_counts"] = counts

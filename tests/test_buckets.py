@@ -1,0 +1,61 @@
+"""`repro.core.buckets`: decision → bucket-plan round-trip coverage.
+
+The distributed trainer trusts the plan blindly (one collective per group),
+so the plan must tile the sched layers exactly: every layer in exactly one
+forward bucket (ascending pulls) and one backward bucket (descending
+pushes), for any decision a scheduler can emit.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import plan_from_decision, random_costs, schedule
+from repro.core.buckets import flat_layer_order
+from repro.core.costmodel import (backward_segments_from_g,
+                                  forward_segments_from_p)
+
+
+def _assert_exact_tiling(plan, L):
+    fwd = flat_layer_order(plan.forward)
+    bwd = flat_layer_order(plan.backward)
+    assert fwd == tuple(range(L)), fwd
+    assert bwd == tuple(range(L - 1, -1, -1)), bwd
+    assert len(set(fwd)) == L and len(set(bwd)) == L
+    assert plan.num_forward_collectives == len(plan.forward)
+    assert plan.num_backward_collectives == len(plan.backward)
+
+
+class TestPlanFromDecision:
+    @pytest.mark.parametrize("L", [1, 2, 17])
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("strategy",
+                             ["sequential", "lbl", "ibatch", "dynacomm"])
+    def test_scheduled_decisions_round_trip(self, L, seed, strategy):
+        costs = random_costs(L, seed=seed)
+        f, b = schedule(costs, strategy)
+        _assert_exact_tiling(plan_from_decision(f, b, L), L)
+
+    @pytest.mark.parametrize("L", [1, 2, 17])
+    def test_random_cut_vectors_round_trip(self, L):
+        """Every legal ZOIP cut vector maps to an exact layer tiling."""
+        rng = np.random.default_rng(L)
+        for _ in range(25):
+            p = rng.integers(0, 2, max(L - 1, 0))
+            g = rng.integers(0, 2, max(L - 1, 0))
+            plan = plan_from_decision(forward_segments_from_p(p),
+                                      backward_segments_from_g(g), L)
+            _assert_exact_tiling(plan, L)
+            # bucket count == number of cuts + 1
+            assert len(plan.forward) == int(np.sum(p)) + 1
+            assert len(plan.backward) == int(np.sum(g)) + 1
+
+    def test_dp_decision_buckets_match_dynacomm_trainer_contract(self):
+        """The invariant ZeroTrainer._validate_plan relies on: backward
+        buckets are descending within and across groups."""
+        costs = random_costs(17, seed=3)
+        f, b = schedule(costs, "dynacomm")
+        plan = plan_from_decision(f, b, 17)
+        for group in plan.backward:
+            assert list(group) == sorted(group, reverse=True)
+        for group in plan.forward:
+            assert list(group) == sorted(group)

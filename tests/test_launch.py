@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
-from repro.launch.hlo_analysis import Roofline, collective_bytes, roofline
+from repro.launch.hlo_analysis import (Roofline, collective_bytes,
+                                       cost_analysis_dict, roofline)
 from repro.launch.specs import decode_specs, input_specs
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -111,7 +112,8 @@ class TestAnalyticFlopsMatchUnrolledHLO:
                  "labels": jnp.zeros((4, 128), jnp.int32)}
         lowered = jax.jit(
             lambda p, b: train_loss(cfg, p, b)).lower(params, batch)
-        hlo_flops = float(lowered.compile().cost_analysis().get("flops", 0))
+        cost = cost_analysis_dict(lowered.compile())
+        hlo_flops = float(cost.get("flops", 0))
         analytic_fwd = sum(p.flops_fwd for p in layer_profiles(cfg, shape))
         assert hlo_flops > 0
         # Empirically XLA-CPU cost_analysis attributes ≈ the FORWARD dots
