@@ -301,6 +301,33 @@ def dt_regime_ablation() -> List[Dict]:
     return rows
 
 
+def dynamic_rescheduling() -> List[Dict]:
+    """Run-time loop payoff (the DynamicTrainer subsystem, cost-model view):
+    the uplink drops by ``drift``×, and we compare keeping the stale
+    10 Gbps-era decision against re-planning on the epoch boundary —
+    exactly what ``repro.dist.dynamic.DynamicTrainer`` automates.  The gap
+    is the price of *not* being dynamic (paper Section IV-C motivation)."""
+    rows = []
+    for model in MODELS:
+        before = cnn_costs(model, batch=32)
+        f0, b0 = schedule(before, "dynacomm")
+        for drift in (4.0, 10.0):
+            after = before.scaled(comm=drift)
+            f1, b1 = schedule(after, "dynacomm")
+            t_stale = evaluate(after, (f0, b0))["total"]
+            t_replan = evaluate(after, (f1, b1))["total"]
+            rows.append({
+                "model": model, "bw_drop_x": drift,
+                "buckets_before": f"{len(f0)}f/{len(b0)}b",
+                "buckets_after": f"{len(f1)}f/{len(b1)}b",
+                "replanned": (f0, b0) != (f1, b1),
+                "iter_stale_s": round(t_stale, 4),
+                "iter_replanned_s": round(t_replan, 4),
+                "stale_penalty": round(t_stale / t_replan, 4),
+            })
+    return rows
+
+
 ALL_BENCHES = {
     "fig5_forward_bs32": fig5_forward_bs32,
     "fig6_backward_bs32": fig6_backward_bs32,
@@ -316,4 +343,5 @@ ALL_BENCHES = {
     "fig10_accuracy_untouched": fig10_accuracy_untouched,
     "breakdown": breakdown_rows,
     "dt_regime_ablation": dt_regime_ablation,
+    "dynamic_rescheduling": dynamic_rescheduling,
 }

@@ -10,11 +10,13 @@ from repro.core.bruteforce import bruteforce_backward, bruteforce_forward
 from repro.core.scheduler import (STRATEGIES, Decision, DynaCommScheduler,
                                   evaluate, schedule)
 from repro.core.buckets import BucketPlan, plan_from_decision
-from repro.core.profiler import (LayerProfile, costs_from_profiles,
-                                 measure_layer_costs, random_costs)
-from repro.core.netmodel import (EdgeNetworkModel, TPUSystemModel,
-                                 TPU_HBM_BW, TPU_ICI_BW_PER_LINK,
-                                 TPU_PEAK_FLOPS_BF16)
+from repro.core.profiler import (LayerProfile, LayerTimingHook,
+                                 costs_from_profiles, measure_layer_costs,
+                                 random_costs)
+from repro.core.netmodel import (EdgeNetworkModel, NetworkSchedule,
+                                 TPUSystemModel, TPU_HBM_BW,
+                                 TPU_ICI_BW_PER_LINK, TPU_PEAK_FLOPS_BF16,
+                                 as_schedule, bandwidth_shift)
 from repro.core.simulator import (IterationTimeline, check_partial_orders,
                                   simulate_backward, simulate_forward,
                                   simulate_iteration)
@@ -27,8 +29,10 @@ __all__ = [
     "bruteforce_forward", "bruteforce_backward",
     "STRATEGIES", "Decision", "DynaCommScheduler", "evaluate", "schedule",
     "BucketPlan", "plan_from_decision",
-    "LayerProfile", "costs_from_profiles", "measure_layer_costs", "random_costs",
-    "EdgeNetworkModel", "TPUSystemModel",
+    "LayerProfile", "LayerTimingHook", "costs_from_profiles",
+    "measure_layer_costs", "random_costs",
+    "EdgeNetworkModel", "NetworkSchedule", "TPUSystemModel",
+    "as_schedule", "bandwidth_shift",
     "TPU_HBM_BW", "TPU_ICI_BW_PER_LINK", "TPU_PEAK_FLOPS_BF16",
     "IterationTimeline", "simulate_forward", "simulate_backward",
     "simulate_iteration", "check_partial_orders",

@@ -12,11 +12,18 @@ Two regimes:
 
 Both produce the same interface: per-layer pt/gt seconds from per-layer
 byte counts, plus dt.
+
+``NetworkSchedule`` adds the *time-varying* regime the dynamic trainer
+re-schedules against: a piecewise-constant sequence of network models
+indexed by epoch (e.g. the edge uplink degrading 10 Gbps → 1 Gbps at
+epoch k), so the same profiling → DP → decision loop sees different pt/gt/Δt
+as training progresses.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Tuple
 
 import numpy as np
 
@@ -76,3 +83,71 @@ class TPUSystemModel:
 
     def compute_time(self, flops: np.ndarray) -> np.ndarray:
         return np.asarray(flops, dtype=np.float64) / (self.peak_flops * self.mfu)
+
+
+# ---------------------------------------------------------------------------
+# Time-varying network conditions (the dynamic-rescheduling workload)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSchedule:
+    """Piecewise-constant time-varying network condition.
+
+    ``knots`` is a sequence of ``(start_epoch, model)`` pairs with strictly
+    increasing epochs starting at 0; ``model_at(e)`` returns the model of the
+    last knot whose start epoch is <= ``e``.  Any object exposing the network
+    interface (``dt`` + ``transfer_time``) can be a knot model.
+    """
+
+    knots: Tuple[Tuple[int, Any], ...]
+
+    def __post_init__(self):
+        knots = tuple((int(e), m) for e, m in self.knots)
+        object.__setattr__(self, "knots", knots)
+        if not knots:
+            raise ValueError("NetworkSchedule needs at least one knot")
+        epochs = [e for e, _ in knots]
+        if epochs[0] != 0:
+            raise ValueError(f"first knot must start at epoch 0, got "
+                             f"{epochs[0]}")
+        if any(b <= a for a, b in zip(epochs, epochs[1:])):
+            raise ValueError(f"knot epochs must be strictly increasing, got "
+                             f"{epochs}")
+
+    def model_at(self, epoch: int) -> Any:
+        if epoch < 0:
+            raise ValueError(f"epoch must be >= 0, got {epoch}")
+        active = self.knots[0][1]
+        for start, model in self.knots:
+            if start > epoch:
+                break
+            active = model
+        return active
+
+    @property
+    def num_knots(self) -> int:
+        return len(self.knots)
+
+
+def as_schedule(net: Any) -> NetworkSchedule:
+    """Wrap a static network model as a one-knot schedule (idempotent)."""
+    if isinstance(net, NetworkSchedule):
+        return net
+    return NetworkSchedule(knots=((0, net),))
+
+
+def bandwidth_shift(before_bps: float, after_bps: float, *, at_epoch: int,
+                    rtt_s: float = EdgeNetworkModel.rtt_s,
+                    setup_s: float = EdgeNetworkModel.setup_s
+                    ) -> NetworkSchedule:
+    """The drift demo scenario: an edge uplink whose bandwidth steps from
+    ``before_bps`` to ``after_bps`` at epoch ``at_epoch`` (RTT unchanged)."""
+    if at_epoch < 1:
+        raise ValueError(f"at_epoch must be >= 1, got {at_epoch}")
+    return NetworkSchedule(knots=(
+        (0, EdgeNetworkModel(bandwidth_bps=before_bps, rtt_s=rtt_s,
+                             setup_s=setup_s)),
+        (at_epoch, EdgeNetworkModel(bandwidth_bps=after_bps, rtt_s=rtt_s,
+                                    setup_s=setup_s)),
+    ))

@@ -117,6 +117,66 @@ def measure_layer_costs(fwd_fns: Sequence[Callable],
                       gt=net.transfer_time(pb), dt=net.dt)
 
 
+class LayerTimingHook:
+    """Per-(phase, layer) wall-clock accumulator for jitted per-layer applies.
+
+    The run-time analogue of the paper's mxnet.profiler hook: the dynamic
+    trainer wraps each sched layer's jitted forward / VJP callable with
+    :meth:`timed`, every call records a blocking wall-clock sample, and
+    :meth:`median` turns the samples into the ``fc`` / ``bc`` cost vectors
+    (dropping the first ``warmup`` samples per key, which include compile
+    time).  Phases are free-form strings; the trainer uses ``"fc"``/``"bc"``.
+    """
+
+    def __init__(self, warmup: int = 1):
+        if warmup < 0:
+            raise ValueError(f"warmup must be >= 0, got {warmup}")
+        self.warmup = warmup
+        self._samples: dict[tuple[str, int], list[float]] = {}
+
+    def record(self, phase: str, layer: int, seconds: float) -> None:
+        self._samples.setdefault((phase, layer), []).append(float(seconds))
+
+    def timed(self, phase: str, layer: int, fn: Callable) -> Callable:
+        """Wrap ``fn`` so each call blocks on its result and records."""
+        def wrapped(*args, **kwargs):
+            t0 = time.perf_counter()
+            out = _block(fn(*args, **kwargs))
+            self.record(phase, layer, time.perf_counter() - t0)
+            return out
+        return wrapped
+
+    def num_samples(self, phase: str, layer: int) -> int:
+        return len(self._samples.get((phase, layer), ()))
+
+    def median(self, phase: str, num_layers: int) -> np.ndarray:
+        """Per-layer median seconds for ``phase`` over layers 0..L-1."""
+        out = np.zeros(num_layers, dtype=np.float64)
+        for l in range(num_layers):
+            samples = self._samples.get((phase, l), [])[self.warmup:]
+            if not samples:
+                raise ValueError(
+                    f"no post-warmup samples for phase {phase!r} layer {l} "
+                    f"(have {self.num_samples(phase, l)}, warmup "
+                    f"{self.warmup}); call each timed fn >= warmup+1 times")
+            out[l] = float(np.median(samples))
+        return out
+
+    def costs(self, *, param_bytes: Sequence[float],
+              net: EdgeNetworkModel | TPUSystemModel,
+              grad_bytes: Sequence[float] | None = None) -> LayerCosts:
+        """Assemble ``LayerCosts``: measured fc/bc + analytic pt/gt/Δt."""
+        pb = np.asarray(param_bytes, dtype=np.float64)
+        gb = pb if grad_bytes is None else np.asarray(grad_bytes, np.float64)
+        L = pb.shape[0]
+        return LayerCosts(pt=net.transfer_time(pb), fc=self.median("fc", L),
+                          bc=self.median("bc", L), gt=net.transfer_time(gb),
+                          dt=net.dt)
+
+    def reset(self) -> None:
+        self._samples.clear()
+
+
 def random_costs(L: int, *, seed: int = 0, dt: float = 1e-2,
                  comm_scale: float = 1.0, comp_scale: float = 1.0) -> LayerCosts:
     """Randomly generated profiling results (paper Fig. 12 methodology)."""

@@ -87,6 +87,14 @@ class DynaCommScheduler:
     _iter_seen: int = 0
     last_scheduling_seconds: float = 0.0
 
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"choose from {sorted(STRATEGIES)}")
+        if self.reschedule_every < 1:
+            raise ValueError(f"reschedule_every must be >= 1, got "
+                             f"{self.reschedule_every}")
+
     def decision_for_iteration(self, costs: LayerCosts) -> Decision:
         """Return the active decision, re-scheduling on the epoch boundary."""
         if self._decision is None or self._iter_seen % self.reschedule_every == 0:
@@ -106,3 +114,4 @@ class DynaCommScheduler:
     def reset(self) -> None:
         self._decision = None
         self._iter_seen = 0
+        self.last_scheduling_seconds = 0.0

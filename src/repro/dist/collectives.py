@@ -112,6 +112,24 @@ def unflatten_tree(flat: jnp.ndarray, spec: FlatSpec) -> Any:
 # ---------------------------------------------------------------------------
 
 
+def _check_bucket(specs: Sequence[FlatSpec], bucket: Sequence[int],
+                  op: str) -> None:
+    """A bucket must be non-empty, name known layers, and share one
+    ``axis_size`` across its specs (one collective ⇒ one shard layout)."""
+    if not bucket:
+        raise ValueError(f"{op}: empty bucket (a DynaComm segment contains "
+                         f"at least one layer)")
+    bad = [l for l in bucket if not 0 <= l < len(specs)]
+    if bad:
+        raise ValueError(f"{op}: bucket {tuple(bucket)} names unknown layers "
+                         f"{bad} (have specs for 0..{len(specs) - 1})")
+    sizes = {specs[l].axis_size for l in bucket}
+    if len(sizes) != 1:
+        raise ValueError(f"{op}: bucket {tuple(bucket)} mixes axis sizes "
+                         f"{sorted(sizes)}; all specs in a bucket must be "
+                         f"sharded over the same axis")
+
+
 def gather_bucket(shards: Sequence[jnp.ndarray], specs: Sequence[FlatSpec],
                   bucket: Sequence[int], axis_name: str) -> Dict[int, Any]:
     """Pull one bucket with a single ``all-gather``.
@@ -120,6 +138,7 @@ def gather_bucket(shards: Sequence[jnp.ndarray], specs: Sequence[FlatSpec],
     Returns ``{layer_id: full parameter pytree}`` for every layer in
     ``bucket``.
     """
+    _check_bucket(specs, bucket, "gather_bucket")
     cols = [shards[l] for l in bucket]
     concat = cols[0] if len(cols) == 1 else jnp.concatenate(cols)
     gathered = jax.lax.all_gather(concat, axis_name)      # (axis, sum shards)
@@ -142,6 +161,7 @@ def reduce_scatter_bucket(grads: Dict[int, Any], specs: Sequence[FlatSpec],
     the result maps each layer to this device's summed ``(padded_l // axis,)``
     gradient shard (caller divides by the axis size for the mean).
     """
+    _check_bucket(specs, bucket, "reduce_scatter_bucket")
     axis_size = specs[bucket[0]].axis_size
     rows = [flatten_tree(grads[l], specs[l]).reshape(axis_size, -1)
             for l in bucket]

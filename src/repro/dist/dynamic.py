@@ -1,0 +1,312 @@
+"""Run-time dynamic re-scheduling for the bucketed ZeRO trainer.
+
+This module closes the paper's run-time loop (Section IV): profiling →
+DP decision → bucket plan → *live* plan swap, once per epoch.  PR 1 built
+the two halves — ``repro.core`` decides, ``repro.dist.zero`` executes — and
+``DynamicTrainer`` is the driver that connects them during training:
+
+* per-sched-layer ``fc``/``bc`` come from *measured* wall-clock timings of
+  the jitted per-layer applies (``LayerTimingHook``, the mxnet.profiler
+  analogue) or from the analytic profiles (deterministic; the default);
+* ``pt``/``gt``/``Δt`` come from the *active* network model — a
+  ``NetworkSchedule`` makes the network condition time-varying (e.g. the
+  uplink dropping 10 Gbps → 1 Gbps at epoch k), which is what makes
+  re-scheduling visible;
+* on every epoch boundary the ``DynaCommScheduler`` re-plans; when the
+  decision changes, the plan is converted with ``plan_from_decision`` and a
+  new compiled step is swapped in.  Compiled steps are cached **keyed by
+  ``BucketPlan``**, so a revisited plan (bandwidth recovers) never
+  re-traces — the swap is a dictionary lookup;
+* every re-schedule records a ``RescheduleEvent`` carrying the scheduling
+  wall time and the paper's Table I ``scheduling_overhead_hidden`` check
+  (does the DP fit in the idle window while the last gradient push is in
+  flight?).
+
+Because the ZeRO state layout (one ``FlatSpec`` flat buffer per sched
+layer) is plan-independent, states carry across plan swaps unchanged, and
+the loss trajectory of a dynamic run is bit-identical to running the same
+plan sequence statically (asserted by ``tests/test_dynamic.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.buckets import BucketPlan, plan_from_decision
+from repro.core.costmodel import LayerCosts
+from repro.core.netmodel import NetworkSchedule, as_schedule
+from repro.core.profiler import LayerTimingHook, costs_from_profiles
+from repro.core.scheduler import Decision, DynaCommScheduler
+from repro.dist.zero import ZeroTrainer
+from repro.launch.hlo_analysis import collective_bytes
+from repro.models import model as model_lib
+from repro.models.profiles import layer_profiles
+from repro.optim import Optimizer
+
+
+def hlo_collective_counts(hlo_text: str) -> Tuple[int, int]:
+    """(#all-gathers, #reduce-scatters) in a compiled HLO dump."""
+    counts = collective_bytes(hlo_text)["_counts"]
+    return counts["all-gather"], counts["reduce-scatter"]
+
+
+def sequential_plan(num_layers: int) -> BucketPlan:
+    """The whole model as one pull and one push bucket (always valid)."""
+    return BucketPlan(forward=(tuple(range(num_layers)),),
+                      backward=(tuple(range(num_layers - 1, -1, -1)),))
+
+
+@dataclasses.dataclass(frozen=True)
+class RescheduleEvent:
+    """One per-epoch scheduling pass (paper Table I bookkeeping)."""
+
+    step: int                     # global step index at the epoch boundary
+    epoch: int
+    plan: BucketPlan              # plan active after this pass
+    plan_changed: bool            # decision differed from the previous epoch
+    retraced: bool                # False ⇒ compiled-step cache hit (or no swap)
+    scheduling_seconds: float     # wall time of the DP re-plan
+    overhead_hidden: bool         # fits in the Δt + gt¹ idle window (Table I)
+
+
+@dataclasses.dataclass
+class DynamicTrainer:
+    """Epoch-boundary re-scheduling driver around :class:`ZeroTrainer`.
+
+    ``network`` may be a static model or a :class:`NetworkSchedule`;
+    ``cost_source`` picks deterministic analytic profiles (default) or
+    measured per-layer wall-clock timings for fc/bc.
+    """
+
+    cfg: ArchConfig
+    mesh: Any
+    optimizer: Optimizer
+    network: Any
+    steps_per_epoch: int
+    strategy: str = "dynacomm"
+    cost_source: str = "analytic"          # "analytic" | "measured"
+    input_shape: Optional[InputShape] = None
+    compute_flops_per_s: Optional[float] = 1e12
+    measure_iters: int = 3
+    measure_warmup: int = 1
+    zero3: bool = False
+    axis_name: str = "data"
+    aux_weight: float = 0.01
+
+    def __post_init__(self):
+        if self.steps_per_epoch < 1:
+            raise ValueError(f"steps_per_epoch must be >= 1, got "
+                             f"{self.steps_per_epoch}")
+        if self.cost_source not in ("analytic", "measured"):
+            raise ValueError(f"cost_source must be 'analytic' or 'measured', "
+                             f"got {self.cost_source!r}")
+        self.network: NetworkSchedule = as_schedule(self.network)
+        self.scheduler = DynaCommScheduler(strategy=self.strategy,
+                                           reschedule_every=self.steps_per_epoch)
+        self.hook = LayerTimingHook(warmup=self.measure_warmup)
+        Ls = model_lib.num_sched_layers(self.cfg)
+        self.base = ZeroTrainer(cfg=self.cfg, mesh=self.mesh,
+                                plan=sequential_plan(Ls),
+                                optimizer=self.optimizer, zero3=self.zero3,
+                                axis_name=self.axis_name,
+                                aux_weight=self.aux_weight)
+        self.events: List[RescheduleEvent] = []
+        self.traces = 0                    # compiled-step cache misses
+        self.cache_hits = 0                # plan swaps served from the cache
+        self._step_cache: Dict[BucketPlan, Callable] = {}
+        self._hlo_counts: Dict[BucketPlan, Tuple[int, int]] = {}
+        self._step_idx = 0
+        self._decision: Optional[Decision] = None
+        self._plan: Optional[BucketPlan] = None
+        self._step_fn: Optional[Callable] = None
+        self._costs: Optional[LayerCosts] = None
+        self._measured_fc_bc: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    # ------------------------------------------------------------------
+    # state / introspection
+    # ------------------------------------------------------------------
+
+    def init_state(self, key):
+        return self.base.init_state(key)
+
+    @property
+    def step_index(self) -> int:
+        return self._step_idx
+
+    @property
+    def epoch(self) -> int:
+        return self._step_idx // self.steps_per_epoch
+
+    @property
+    def plan(self) -> Optional[BucketPlan]:
+        """The currently active bucket plan (None before the first step)."""
+        return self._plan
+
+    @property
+    def plans_seen(self) -> Tuple[BucketPlan, ...]:
+        return tuple(self._step_cache)
+
+    def hlo_counts(self, plan: Optional[BucketPlan] = None) -> Tuple[int, int]:
+        """(#all-gathers, #reduce-scatters) of a cached plan's compiled step."""
+        plan = self._plan if plan is None else plan
+        if plan not in self._hlo_counts:
+            raise KeyError(f"plan {plan} has no compiled step yet")
+        return self._hlo_counts[plan]
+
+    # ------------------------------------------------------------------
+    # cost vectors
+    # ------------------------------------------------------------------
+
+    def _input_shape_for(self, batch) -> InputShape:
+        if self.input_shape is not None:
+            return self.input_shape
+        if "tokens" not in batch:
+            raise ValueError("cannot derive an InputShape from a batch "
+                             "without 'tokens'; pass input_shape= explicitly")
+        B, T = batch["tokens"].shape
+        return InputShape("dynamic", int(T), int(B), "train")
+
+    def costs_for_epoch(self, epoch: int, state, batch) -> LayerCosts:
+        """fc/bc from the configured source; pt/gt/Δt from the epoch's
+        network model."""
+        net = self.network.model_at(epoch)
+        if self.cost_source == "analytic":
+            return costs_from_profiles(
+                layer_profiles(self.cfg, self._input_shape_for(batch)),
+                net=net, compute_flops_per_s=self.compute_flops_per_s)
+        if self._measured_fc_bc is None:
+            measured = self.measure_costs(state, batch, net=net)
+            self._measured_fc_bc = (measured.fc, measured.bc)
+            return measured
+        fc, bc = self._measured_fc_bc
+        pb = np.asarray(model_lib.sched_layer_bytes(self.cfg), np.float64)
+        return LayerCosts(pt=net.transfer_time(pb), fc=fc, bc=bc,
+                          gt=net.transfer_time(pb), dt=net.dt)
+
+    def measure_costs(self, state, batch, *, net=None,
+                      iters: Optional[int] = None) -> LayerCosts:
+        """Measured per-sched-layer fc/bc via the :class:`LayerTimingHook`.
+
+        Each sched layer's forward apply and VJP is jitted and timed
+        standalone (the run-time analogue of the paper's per-layer
+        mxnet.profiler pass); pt/gt/Δt stay analytic from ``net``.
+        """
+        net = self.network.model_at(self.epoch) if net is None else net
+        iters = self.measure_iters if iters is None else iters
+        tr, hook = self.base, self.hook
+        Ls, kinds = tr.num_layers, tr._kinds
+        calls = hook.warmup + iters
+        trees = jax.device_get(
+            model_lib.sched_layer_trees(tr.params_from_state(state)))
+        hook.reset()
+
+        one = jnp.ones((), jnp.float32)
+        aux_ct = jnp.asarray(tr.aux_weight, jnp.float32)
+
+        embed_fwd = jax.jit(lambda p, b: tr._apply_embed(p, b))
+        h0 = jax.block_until_ready(embed_fwd(trees[0], batch))
+        ct_h = jnp.ones_like(h0)
+        timed = hook.timed("fc", 0, embed_fwd)
+        for _ in range(calls):
+            timed(trees[0], batch)
+        embed_bwd = jax.jit(lambda p, b, ct: jax.vjp(
+            lambda pp: tr._apply_embed(pp, b), p)[1](ct))
+        timed = hook.timed("bc", 0, embed_bwd)
+        for _ in range(calls):
+            timed(trees[0], batch, ct_h)
+
+        # one jitted fwd/bwd per distinct layer kind — layers of the same
+        # kind share the compilation (their shapes match)
+        blk_fwd = {k: jax.jit(lambda p, x, _k=k: tr._apply_block(p, x, _k))
+                   for k in set(kinds)}
+        blk_bwd = {k: jax.jit(lambda p, x, ct, a, _k=k: jax.vjp(
+                       lambda pp, xx: tr._apply_block(pp, xx, _k), p, x
+                   )[1]((ct, a)))
+                   for k in set(kinds)}
+        for l in range(1, Ls - 1):
+            kind = kinds[l - 1]
+            timed = hook.timed("fc", l, blk_fwd[kind])
+            for _ in range(calls):
+                timed(trees[l], h0)
+            timed = hook.timed("bc", l, blk_bwd[kind])
+            for _ in range(calls):
+                timed(trees[l], h0, ct_h, aux_ct)
+
+        fin_fwd = jax.jit(lambda pf, pe, x, b: tr._apply_final(pf, pe, x, b))
+        timed = hook.timed("fc", Ls - 1, fin_fwd)
+        for _ in range(calls):
+            timed(trees[Ls - 1], trees[0], h0, batch)
+        fin_bwd = jax.jit(lambda pf, pe, x, b, ct: jax.vjp(
+            lambda a, c, d: tr._apply_final(a, c, d, b), pf, pe, x)[1](ct))
+        timed = hook.timed("bc", Ls - 1, fin_bwd)
+        for _ in range(calls):
+            timed(trees[Ls - 1], trees[0], h0, batch, one)
+
+        pb = np.asarray(model_lib.sched_layer_bytes(self.cfg), np.float64)
+        return hook.costs(param_bytes=pb, net=net)
+
+    # ------------------------------------------------------------------
+    # the dynamic loop
+    # ------------------------------------------------------------------
+
+    def _maybe_reschedule(self, i: int, state, batch) -> None:
+        boundary = i % self.steps_per_epoch == 0
+        if boundary:
+            self._costs = self.costs_for_epoch(i // self.steps_per_epoch,
+                                               state, batch)
+        decision = self.scheduler.decision_for_iteration(self._costs)
+        if not boundary and decision == self._decision:
+            return
+        plan = plan_from_decision(*decision, self.base.num_layers)
+        prev = self._plan
+        retraced = False
+        if plan != prev:
+            if plan in self._step_cache:
+                self.cache_hits += 1
+            else:
+                retraced = True
+                self.traces += 1
+                fn = jax.jit(self.base.with_plan(plan).build_train_step())
+                compiled = fn.lower(state, batch).compile()
+                self._hlo_counts[plan] = hlo_collective_counts(
+                    compiled.as_text())
+                self._step_cache[plan] = compiled
+            self._step_fn = self._step_cache[plan]
+            self._plan = plan
+        self._decision = decision
+        self.events.append(RescheduleEvent(
+            step=i, epoch=i // self.steps_per_epoch, plan=plan,
+            plan_changed=prev is not None and plan != prev,
+            retraced=retraced,
+            scheduling_seconds=self.scheduler.last_scheduling_seconds,
+            overhead_hidden=self.scheduler.scheduling_overhead_hidden(
+                self._costs)))
+
+    def step(self, state, batch):
+        """One training step; re-plans (and maybe re-buckets) on epoch
+        boundaries.  Returns ``(new_state, mean_loss)``."""
+        self._maybe_reschedule(self._step_idx, state, batch)
+        new_state, loss = self._step_fn(state, batch)
+        self._step_idx += 1
+        return new_state, loss
+
+    def run(self, state, batch_fn: Callable[[int], Any], num_steps: int, *,
+            log_every: int = 0):
+        """Drive ``num_steps`` steps with ``batch_fn(i) -> batch``.
+
+        Returns ``(state, losses)`` with one float loss per step."""
+        losses: List[float] = []
+        for i in range(num_steps):
+            state, loss = self.step(state, batch_fn(i))
+            losses.append(float(loss))
+            if log_every and (i + 1) % log_every == 0:
+                f, b = (len(self._plan.forward), len(self._plan.backward))
+                print(f"step {i + 1:4d}  epoch {self.epoch}  "
+                      f"loss {losses[-1]:.4f}  buckets {f}/{b}")
+        return state, losses

@@ -26,6 +26,7 @@ The step is built with ``shard_map`` so the collectives above are the
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Any, Dict, List, Optional
 
@@ -86,6 +87,19 @@ class ZeroTrainer:
         if bwd != tuple(range(Ls - 1, -1, -1)):
             raise ValueError(f"backward buckets {self.plan.backward} do not "
                              f"push layers {Ls - 1}..0 in order")
+
+    def with_plan(self, plan: BucketPlan) -> "ZeroTrainer":
+        """Same trainer driving a different bucket plan.
+
+        The state layout (``FlatSpec`` per sched layer) depends only on the
+        architecture and the axis size, never on the plan — so states carry
+        across plan swaps unchanged.  Shares the already-computed specs
+        instead of re-running ``eval_shape``.
+        """
+        new = copy.copy(self)
+        new.plan = plan
+        new._validate_plan()
+        return new
 
     def _flat_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, P(self.axis_name))

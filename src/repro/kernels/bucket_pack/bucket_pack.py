@@ -46,11 +46,26 @@ def _pack_index_out(k, t, offsets_ref):
     return (jnp.where(in_range, base + t, offsets_ref[-1] // TILE),)
 
 
+def _check_aligned_lengths(aligned_lengths: Sequence[int], k_count: int) -> None:
+    if len(aligned_lengths) != k_count:
+        raise ValueError(f"got {len(aligned_lengths)} aligned lengths for "
+                         f"{k_count} segments")
+    for n in aligned_lengths:
+        if n <= 0 or n % TILE:
+            raise ValueError(f"aligned lengths must be positive multiples of "
+                             f"TILE={TILE}, got {tuple(aligned_lengths)}")
+
+
 def pack_pallas(segments: jnp.ndarray, aligned_lengths: Sequence[int], *,
                 interpret: bool = True) -> jnp.ndarray:
     """segments: (K, Lmax) with Lmax % TILE == 0 → (sum(aligned_lengths),)."""
+    if segments.ndim != 2:
+        raise ValueError(f"segments must be (K, Lmax), got {segments.shape}")
     k_count, lmax = segments.shape
-    assert lmax % TILE == 0
+    if lmax % TILE:
+        raise ValueError(f"segment row length {lmax} is not a multiple of "
+                         f"TILE={TILE}")
+    _check_aligned_lengths(aligned_lengths, k_count)
     offsets = np.concatenate([[0], np.cumsum(aligned_lengths)]).astype(np.int32)
     total = int(offsets[-1])
 
@@ -67,10 +82,6 @@ def pack_pallas(segments: jnp.ndarray, aligned_lengths: Sequence[int], *,
         interpret=interpret,
     )(jnp.asarray(offsets), segments)
     return out[:total]
-
-
-def _unpack_kernel(offsets_ref, flat_ref, out_ref):
-    out_ref[...] = flat_ref[...]
 
 
 def _unpack_index_in(k, t, offsets_ref):
@@ -96,9 +107,14 @@ def _unpack_masked_kernel(offsets_ref, flat_ref, out_ref):
 def unpack_pallas(flat: jnp.ndarray, aligned_lengths: Sequence[int],
                   lmax: int, *, interpret: bool = True) -> jnp.ndarray:
     """flat (sum(aligned_lengths),) → (K, Lmax) zero-padded views."""
-    assert lmax % TILE == 0
+    if lmax % TILE:
+        raise ValueError(f"lmax {lmax} is not a multiple of TILE={TILE}")
     k_count = len(aligned_lengths)
+    _check_aligned_lengths(aligned_lengths, k_count)
     offsets = np.concatenate([[0], np.cumsum(aligned_lengths)]).astype(np.int32)
+    if flat.shape != (int(offsets[-1]),):
+        raise ValueError(f"flat buffer shape {flat.shape} != "
+                         f"({int(offsets[-1])},) implied by aligned lengths")
 
     grid = (k_count, lmax // TILE)
     out = pl.pallas_call(

@@ -1,11 +1,17 @@
 """Training launcher: ``--arch <id>`` + input shape + strategy.
 
-Two runtimes:
+Three runtimes:
 
 * ``--runtime local`` (default) — single-process jit training on whatever
   devices exist; reduced configs runnable on CPU.
 * ``--runtime zero`` — the DynaComm-bucketed ZeRO trainer over a 1-D data
-  mesh (all local devices), schedule chosen by ``--strategy``.
+  mesh (all local devices), schedule chosen by ``--strategy``; the plan is
+  decided once at startup.
+* ``--runtime dynamic`` — the run-time loop (paper Section IV-C): the
+  scheduler re-plans every ``--steps-per-epoch`` steps against the active
+  network model and swaps compiled steps when the decision changes.  Pair
+  with ``--bw-shift-gbps`` to script a bandwidth drift and watch the
+  schedule re-segment mid-training.
 
 Examples::
 
@@ -14,6 +20,10 @@ Examples::
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
         --reduced --runtime zero --strategy dynacomm --steps 50
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --reduced --runtime dynamic --steps 60 --steps-per-epoch 20 \
+        --bw-gbps 10 --bw-shift-gbps 1 --shift-epoch 1
 """
 
 from __future__ import annotations
@@ -41,9 +51,22 @@ def main() -> None:
     ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant (CPU-friendly)")
-    ap.add_argument("--runtime", choices=("local", "zero"), default="local")
+    ap.add_argument("--runtime", choices=("local", "zero", "dynamic"),
+                    default="local")
     ap.add_argument("--strategy", default="dynacomm",
                     choices=("sequential", "lbl", "ibatch", "dynacomm"))
+    # scheduling knobs (zero + dynamic runtimes)
+    ap.add_argument("--steps-per-epoch", type=int, default=20,
+                    help="re-scheduling interval of the dynamic runtime")
+    ap.add_argument("--bw-gbps", type=float, default=10.0,
+                    help="edge uplink bandwidth (Gbit/s)")
+    ap.add_argument("--bw-shift-gbps", type=float, default=None,
+                    help="drift the uplink to this bandwidth at --shift-epoch")
+    ap.add_argument("--shift-epoch", type=int, default=1)
+    ap.add_argument("--cost-source", choices=("analytic", "measured"),
+                    default="analytic")
+    ap.add_argument("--worker-flops", type=float, default=1e10,
+                    help="edge-worker compute rate fed to the profiler")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -69,14 +92,48 @@ def main() -> None:
         loop.run(jax.random.PRNGKey(0), iter(pipe), num_steps=args.steps)
         return
 
-    # zero runtime: profile → schedule → bucketed trainer
-    from repro.dist.zero import ZeroTrainer
     devs = jax.devices()
     mesh = Mesh(np.array(devs).reshape(len(devs),), ("data",))
     shape = InputShape("cli", args.seq, args.batch, "train")
-    costs = costs_from_profiles(layer_profiles(cfg, shape),
-                                net=EdgeNetworkModel(bandwidth_bps=1e9),
-                                compute_flops_per_s=1e12)
+
+    if args.runtime == "dynamic":
+        # run-time loop: re-profile + re-plan every epoch, swap compiled
+        # steps when the decision changes
+        from repro.core import bandwidth_shift
+        from repro.dist.dynamic import DynamicTrainer
+        if args.bw_shift_gbps is not None:
+            net = bandwidth_shift(args.bw_gbps * 1e9,
+                                  args.bw_shift_gbps * 1e9,
+                                  at_epoch=args.shift_epoch)
+        else:
+            net = EdgeNetworkModel(bandwidth_bps=args.bw_gbps * 1e9)
+        dyn = DynamicTrainer(cfg=cfg, mesh=mesh, optimizer=opt, network=net,
+                             steps_per_epoch=args.steps_per_epoch,
+                             strategy=args.strategy, input_shape=shape,
+                             cost_source=args.cost_source,
+                             compute_flops_per_s=args.worker_flops)
+        print(f"[dynamic] {len(devs)} devices; strategy {args.strategy}, "
+              f"re-plan every {args.steps_per_epoch} steps")
+        state = dyn.init_state(jax.random.PRNGKey(0))
+        dyn.run(state, pipe.batch, args.steps, log_every=10)
+        for e in dyn.events:
+            ag, rs = dyn.hlo_counts(e.plan)
+            print(f"epoch {e.epoch:3d} step {e.step:4d}: "
+                  f"{len(e.plan.forward)} pull / {len(e.plan.backward)} push "
+                  f"buckets (hlo {ag} ag / {rs} rs)  "
+                  f"{'re-segmented' if e.plan_changed else 'unchanged'}"
+                  f"{' [cache hit]' if e.plan_changed and not e.retraced else ''}"
+                  f"  sched {e.scheduling_seconds * 1e3:.2f} ms "
+                  f"hidden={e.overhead_hidden}")
+        print(f"[dynamic] traces {dyn.traces}, cache hits {dyn.cache_hits}")
+        return
+
+    # zero runtime: profile → schedule → bucketed trainer
+    from repro.dist.zero import ZeroTrainer
+    costs = costs_from_profiles(
+        layer_profiles(cfg, shape),
+        net=EdgeNetworkModel(bandwidth_bps=args.bw_gbps * 1e9),
+        compute_flops_per_s=args.worker_flops)
     sched = DynaCommScheduler(strategy=args.strategy)
     decision = sched.decision_for_iteration(costs)
     plan = plan_from_decision(*decision, num_sched_layers(cfg))

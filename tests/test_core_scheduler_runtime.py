@@ -29,6 +29,25 @@ class TestSchedulerRuntime:
         sched.reset()
         assert sched._decision is None and sched._iter_seen == 0
 
+    def test_reset_clears_stale_scheduling_time(self):
+        c = random_costs(6, seed=1, dt=1e-3)
+        sched = DynaCommScheduler(reschedule_every=100)
+        sched.decision_for_iteration(c)
+        assert sched.last_scheduling_seconds > 0
+        sched.reset()
+        assert sched.last_scheduling_seconds == 0.0
+
+    @pytest.mark.parametrize("every", [0, -1, -100])
+    def test_nonpositive_interval_rejected(self, every):
+        """Regression: reschedule_every=0 used to ZeroDivisionError at the
+        first decision instead of failing at construction."""
+        with pytest.raises(ValueError, match="reschedule_every"):
+            DynaCommScheduler(reschedule_every=every)
+
+    def test_unknown_strategy_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="unknown strategy"):
+            DynaCommScheduler(strategy="nope")
+
     def test_strategy_plumbs_through(self):
         c = random_costs(8, seed=2, dt=5e-2)
         seq = DynaCommScheduler(strategy="sequential").decision_for_iteration(c)

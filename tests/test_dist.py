@@ -44,6 +44,40 @@ class TestFlatSpecs:
                                            atol=1e-7)
 
 
+class TestBucketValidation:
+    """gather/reduce-scatter bucket preconditions fail fast with clear
+    messages instead of index-erroring (or silently mixing shard layouts)."""
+
+    def _specs(self, axis_sizes):
+        tree = {"w": jnp.ones((4, 4))}
+        return [make_flat_spec(tree, a) for a in axis_sizes]
+
+    def test_empty_bucket_rejected(self):
+        from repro.dist.collectives import (gather_bucket,
+                                            reduce_scatter_bucket)
+        specs = self._specs([2, 2])
+        with pytest.raises(ValueError, match="empty bucket"):
+            gather_bucket([jnp.ones(8)] * 2, specs, (), "data")
+        with pytest.raises(ValueError, match="empty bucket"):
+            reduce_scatter_bucket({}, specs, (), "data")
+
+    def test_unknown_layer_rejected(self):
+        from repro.dist.collectives import gather_bucket
+        specs = self._specs([2, 2])
+        with pytest.raises(ValueError, match="unknown layers"):
+            gather_bucket([jnp.ones(8)] * 2, specs, (0, 5), "data")
+
+    def test_mixed_axis_size_rejected(self):
+        from repro.dist.collectives import (gather_bucket,
+                                            reduce_scatter_bucket)
+        specs = self._specs([2, 4])
+        with pytest.raises(ValueError, match="mixes axis sizes"):
+            gather_bucket([jnp.ones(8), jnp.ones(4)], specs, (0, 1), "data")
+        grads = {l: {"w": jnp.ones((4, 4))} for l in (0, 1)}
+        with pytest.raises(ValueError, match="mixes axis sizes"):
+            reduce_scatter_bucket(grads, specs, (0, 1), "data")
+
+
 class TestShardingRules:
     def test_canonical_dims(self):
         kw = dict(model_axis="model", data_axes=("data",), model_size=16,

@@ -1,0 +1,196 @@
+"""Dynamic re-scheduling: time-varying networks, the per-layer timing hook,
+and the DynamicTrainer loop.
+
+Quick tests run single-device at the cost-model level; the multi-device
+trainer claims (plan swap, step-cache hit counts, bit-identical losses,
+HLO collective counts) run in a 4-forged-device subprocess.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core import (EdgeNetworkModel, LayerTimingHook, NetworkSchedule,
+                        TPUSystemModel, as_schedule, bandwidth_shift,
+                        costs_from_profiles, schedule)
+from repro.models.profiles import layer_profiles
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class TestNetworkSchedule:
+    def test_piecewise_selection(self):
+        hi, lo = EdgeNetworkModel(bandwidth_bps=10e9), \
+            EdgeNetworkModel(bandwidth_bps=1e9)
+        sched = NetworkSchedule(knots=((0, hi), (3, lo)))
+        assert sched.model_at(0) is hi
+        assert sched.model_at(2) is hi
+        assert sched.model_at(3) is lo
+        assert sched.model_at(100) is lo
+
+    def test_validation(self):
+        m = EdgeNetworkModel()
+        with pytest.raises(ValueError):
+            NetworkSchedule(knots=())
+        with pytest.raises(ValueError):
+            NetworkSchedule(knots=((1, m),))          # must start at 0
+        with pytest.raises(ValueError):
+            NetworkSchedule(knots=((0, m), (0, m)))   # strictly increasing
+        with pytest.raises(ValueError):
+            NetworkSchedule(knots=((0, m),)).model_at(-1)
+
+    def test_as_schedule_idempotent(self):
+        m = TPUSystemModel()
+        s = as_schedule(m)
+        assert s.model_at(7) is m
+        assert as_schedule(s) is s
+
+    def test_bandwidth_shift(self):
+        s = bandwidth_shift(10e9, 1e9, at_epoch=2)
+        assert s.model_at(1).bandwidth_bps == 10e9
+        assert s.model_at(2).bandwidth_bps == 1e9
+        # RTT (and hence Δt) unchanged across the shift
+        assert s.model_at(0).dt == s.model_at(2).dt
+        with pytest.raises(ValueError):
+            bandwidth_shift(10e9, 1e9, at_epoch=0)
+
+
+class TestLayerTimingHook:
+    def test_medians_drop_warmup(self):
+        hook = LayerTimingHook(warmup=1)
+        for l, (first, rest) in enumerate([(9.0, 1.0), (9.0, 2.0)]):
+            hook.record("fc", l, first)      # compile-tainted sample
+            hook.record("fc", l, rest)
+            hook.record("fc", l, rest)
+        np.testing.assert_allclose(hook.median("fc", 2), [1.0, 2.0])
+
+    def test_missing_layer_raises(self):
+        hook = LayerTimingHook(warmup=0)
+        hook.record("fc", 0, 1.0)
+        with pytest.raises(ValueError, match="layer 1"):
+            hook.median("fc", 2)
+
+    def test_timed_wrapper_records(self):
+        hook = LayerTimingHook(warmup=0)
+        fn = hook.timed("bc", 3, lambda x: x + 1)
+        assert fn(41) == 42
+        assert hook.num_samples("bc", 3) == 1
+
+    def test_costs_assembly(self):
+        hook = LayerTimingHook(warmup=0)
+        for l in range(3):
+            hook.record("fc", l, 1e-3 * (l + 1))
+            hook.record("bc", l, 2e-3 * (l + 1))
+        net = EdgeNetworkModel(bandwidth_bps=1e9)
+        costs = hook.costs(param_bytes=[1e6, 2e6, 3e6], net=net)
+        assert costs.num_layers == 3
+        np.testing.assert_allclose(costs.fc, [1e-3, 2e-3, 3e-3])
+        np.testing.assert_allclose(costs.bc, [2e-3, 4e-3, 6e-3])
+        np.testing.assert_allclose(costs.pt, costs.gt)
+        assert costs.dt == net.dt
+        hook.reset()
+        with pytest.raises(ValueError):
+            hook.median("fc", 1)
+
+
+class TestDriftChangesDecision:
+    def test_dp_resegment_across_bandwidth_drop(self):
+        """The scenario the trainer test exercises, at the cost-model level:
+        dynacomm's decision differs between 10 Gbps and 1 Gbps."""
+        cfg = get_config("granite-3-2b").reduced()
+        profs = layer_profiles(cfg, InputShape("dyn", 32, 8, "train"))
+        decisions = []
+        for bw in (10e9, 1e9):
+            costs = costs_from_profiles(
+                profs, net=EdgeNetworkModel(bandwidth_bps=bw),
+                compute_flops_per_s=1e10)
+            decisions.append(schedule(costs, "dynacomm"))
+        assert decisions[0] != decisions[1]
+
+
+class TestDynamicTrainerSingleDevice:
+    def test_constructor_validation(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.dist.dynamic import DynamicTrainer
+        from repro.optim import sgd
+
+        cfg = get_config("granite-3-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        kw = dict(cfg=cfg, mesh=mesh, optimizer=sgd(1e-2, 0.9),
+                  network=EdgeNetworkModel())
+        with pytest.raises(ValueError, match="steps_per_epoch"):
+            DynamicTrainer(steps_per_epoch=0, **kw)
+        with pytest.raises(ValueError, match="cost_source"):
+            DynamicTrainer(steps_per_epoch=5, cost_source="psychic", **kw)
+
+    def test_sequential_plan_shape(self):
+        from repro.dist.dynamic import sequential_plan
+        p = sequential_plan(4)
+        assert p.forward == ((0, 1, 2, 3),)
+        assert p.backward == ((3, 2, 1, 0),)
+
+    def test_hlo_collective_counts(self):
+        from repro.dist.dynamic import hlo_collective_counts
+        hlo = (
+            "  %a = f32[4,16]{1,0} all-gather(f32[1,16]{1,0} %x), "
+            "dimensions={0}\n"
+            "  %b = f32[1,4]{1,0} reduce-scatter(f32[4,4]{1,0} %y), "
+            "dimensions={0}\n"
+            "  %c = (f32[8]{0}, f32[32]{0}) all-gather-start(f32[8]{0} %z), "
+            "dimensions={0}\n")
+        assert hlo_collective_counts(hlo) == (2, 1)
+
+
+@pytest.mark.slow
+class TestDynamicTrainerMultiDevice:
+    @pytest.fixture(scope="class")
+    def result(self):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        env.pop("XLA_FLAGS", None)
+        proc = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tests", "helpers",
+                                          "dynamic_trainer_check.py")],
+            capture_output=True, text=True, env=env, timeout=1200)
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+
+    def test_plan_changes_on_bandwidth_drop(self, result):
+        ev = result["events"]
+        assert len(ev) == 3                      # one per epoch boundary
+        assert [e["step"] for e in ev] == [0, 3, 6]
+        assert not ev[0]["changed"]              # first plan isn't a "change"
+        assert ev[1]["changed"], "10→1 Gbps drop must re-segment the plan"
+        assert (ev[1]["fwd"], ev[1]["bwd"]) != (ev[0]["fwd"], ev[0]["bwd"])
+
+    def test_revisited_plan_hits_step_cache(self, result):
+        """Exactly one new trace per distinct plan; the revisit re-traces
+        nothing."""
+        ev = result["events"]
+        assert ev[2]["changed"] and not ev[2]["retraced"]
+        assert (ev[2]["fwd"], ev[2]["bwd"]) == (ev[0]["fwd"], ev[0]["bwd"])
+        assert result["traces"] == len(result["plans"]) == 2
+        assert result["cache_hits"] == 1
+
+    def test_hlo_counts_match_plans(self, result):
+        for p in result["plans"]:
+            assert p["ag"] == p["fwd"], p
+            assert p["rs"] == p["bwd"], p
+
+    def test_losses_bit_identical_to_static_sequence(self, result):
+        assert result["losses_dyn"] == result["losses_static"]
+
+    def test_scheduling_overhead_hidden(self, result):
+        for e in result["events"]:
+            assert e["sched_s"] >= 0
+        # The epoch-0 pass has no in-flight gradient push to hide behind
+        # (and pays one-time warmup), so Table I's claim is asserted for the
+        # steady-state re-schedules only.
+        for e in result["events"][1:]:
+            assert e["hidden"], "DP must fit in the Δt + gt¹ idle window"

@@ -30,6 +30,24 @@ class TestBucketPack:
         ref2 = bucket_unpack_ref(ref, alens, segs.shape[1])
         np.testing.assert_array_equal(np.asarray(back), np.asarray(ref2))
 
+    def test_bad_inputs_raise_value_error(self):
+        """User-input validation is real errors, not bare asserts."""
+        from repro.kernels.bucket_pack.bucket_pack import (pack_pallas,
+                                                           unpack_pallas)
+        good = jnp.ones((2, 512))
+        with pytest.raises(ValueError, match="multiple of"):
+            pack_pallas(jnp.ones((2, 100)), (512, 512))
+        with pytest.raises(ValueError, match="aligned lengths"):
+            pack_pallas(good, (512,))                 # count mismatch
+        with pytest.raises(ValueError, match="positive multiples"):
+            pack_pallas(good, (512, 100))             # unaligned length
+        with pytest.raises(ValueError, match="must be \\(K, Lmax\\)"):
+            pack_pallas(jnp.ones((512,)), (512,))
+        with pytest.raises(ValueError, match="multiple of"):
+            unpack_pallas(jnp.ones(1024), (512, 512), 100)
+        with pytest.raises(ValueError, match="flat buffer shape"):
+            unpack_pallas(jnp.ones(512), (512, 512), 512)
+
     def test_ragged_lengths_align(self):
         key = jax.random.PRNGKey(1)
         vecs = [jax.random.normal(jax.random.fold_in(key, i), (n,))
