@@ -1,0 +1,128 @@
+"""Parameter-server benchmark scenarios (beyond-paper).
+
+Two benches:
+
+* ``ps_topology`` — DynaComm vs competing strategies in the PS regime:
+  the paper's CNN cost tables mapped onto a heterogeneous S×W topology
+  (per-worker compute rates, asymmetric per-link bandwidth), comparing
+  the synchronous straggler makespan of each strategy's consensus plan
+  and the per-worker async plan times — the scenario space the symmetric
+  cluster regime (Figs. 5-8) cannot express.
+* ``ps_staleness`` — the sync-vs-async trade: simulated time to apply N
+  gradient pushes on the smoke CNN as the staleness bound k grows
+  (k=0 serializes; larger k reclaims barrier-wait time at the price of
+  stale-gradient rejections).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.edge_setup import cnn_costs
+from repro.core import (consensus_decision, iteration_time,
+                        schedule_topology, simulate_ps_iteration)
+from repro.core.costmodel import TopologyCosts, LayerCosts
+
+MODELS = ("vgg19", "googlenet", "inception-v4", "resnet152")
+STRATS = ("sequential", "lbl", "ibatch", "dynacomm")
+
+
+def _hetero_topology_costs(base: LayerCosts, num_workers: int = 4
+                           ) -> TopologyCosts:
+    """Half the fleet at 1/4 compute behind a 4x-slower asymmetric uplink."""
+    workers = []
+    for w in range(num_workers):
+        slow = w >= num_workers // 2
+        comp = 4.0 if slow else 1.0
+        comm = 4.0 if slow else 1.0
+        c = base.scaled(compute=comp, comm=comm)
+        # uplink (push) is 8x the downlink cost for the slow half: gradient
+        # pushes dominate, the asymmetric-Δt path is exercised
+        workers.append(LayerCosts(pt=c.pt, fc=c.fc, bc=c.bc,
+                                  gt=c.gt * 2.0, dt=c.dt,
+                                  dt_bwd=c.dt * 1.5))
+    return TopologyCosts(workers=tuple(workers))
+
+
+def ps_topology() -> List[Dict]:
+    """Sync makespan + async per-worker times per strategy and model."""
+    rows = []
+    for model in MODELS:
+        topo = _hetero_topology_costs(cnn_costs(model, batch=32))
+        seq_makespan = None
+        for strat in STRATS:
+            decision, makespan = consensus_decision(topo, strat)
+            if strat == "sequential":
+                seq_makespan = makespan
+            tl = simulate_ps_iteration(topo, decision)
+            per_worker = schedule_topology(topo, strat)
+            async_times = [iteration_time(c, *d)
+                           for c, d in zip(topo.workers, per_worker)]
+            rows.append({
+                "model": model, "strategy": strat,
+                "workers": topo.num_workers,
+                "fwd_segments": len(decision[0]),
+                "bwd_segments": len(decision[1]),
+                "sync_makespan_s": round(makespan, 4),
+                "straggler": tl.straggler,
+                "barrier_wait_mean_s": round(
+                    sum(tl.barrier_waits) / tl.num_workers, 4),
+                "async_mean_iter_s": round(
+                    sum(async_times) / len(async_times), 4),
+                "reduced_vs_sequential_pct": round(
+                    100 * (1 - makespan / seq_makespan), 2),
+            })
+    return rows
+
+
+def ps_staleness() -> List[Dict]:
+    """Simulated seconds per accepted push vs the staleness bound k."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import plan_from_decision
+    from repro.models.cnn import small_cnn_init, small_cnn_loss
+    from repro.optim import sgd
+    from repro.ps import AsyncPSTrainer, PSTopology, asymmetric_link
+
+    links = tuple(asymmetric_link(10e9, 1e9) for _ in range(3))
+    topo = PSTopology(num_servers=2, links=links,
+                      worker_flops=(1e10, 1e10, 5e9))
+    params = small_cnn_init(jax.random.PRNGKey(0))
+    L = len(params["layers"])
+    plan = plan_from_decision(((1, 3), (4, L)), ((4, L), (1, 3)), L)
+
+    def loss_fn(layers, batch):
+        return small_cnn_loss({"layers": layers}, batch["images"],
+                              batch["labels"])
+
+    def batch_fn(w, i):
+        r = np.random.default_rng(100003 * w + i)
+        return {"images": jnp.asarray(r.normal(size=(8, 32, 32, 3)),
+                                      jnp.float32),
+                "labels": jnp.asarray(r.integers(0, 10, size=(8,)),
+                                      jnp.int32)}
+
+    rows = []
+    pushes = 24
+    for k in (0, 1, 2, 4):
+        tr = AsyncPSTrainer(init_layers=params["layers"], loss_fn=loss_fn,
+                            optimizer=sgd(0.02), topology=topo,
+                            plan=plan, staleness=k)
+        log = tr.run(pushes, batch_fn)
+        rows.append({
+            "staleness_k": k, "accepted": len(log.accepted),
+            "rejected": log.num_rejected,
+            "max_staleness": log.max_staleness,
+            "sim_makespan_s": round(log.makespan, 4),
+            "sim_s_per_push": round(log.makespan / pushes, 4),
+            "final_loss": round(log.losses[-1], 4),
+        })
+    return rows
+
+
+PS_BENCHES = {
+    "ps_topology": ps_topology,
+    "ps_staleness": ps_staleness,
+}

@@ -3,11 +3,16 @@
 ``python -m benchmarks.run`` prints, per bench, a CSV block
 (``name,us_per_call,derived``-style: each row carries the bench name, the
 wall time of producing it, and the derived metrics as key=value pairs).
+
+``--json-out FILE`` additionally writes the selected benches as one JSON
+document ``{bench: {"elapsed_s": ..., "rows": [...]}}`` — CI uses this to
+publish the PS scenario trajectory as a ``BENCH_ps.json`` artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -21,12 +26,16 @@ def _print_block(name: str, rows, elapsed_s: float) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run a single bench by name")
+                    help="run a comma-separated subset of benches by name")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--json-out", default=None,
+                    help="also write results as JSON to this path")
     args, _ = ap.parse_known_args()
 
     from benchmarks.paper_figures import ALL_BENCHES
+    from benchmarks.ps_scenarios import PS_BENCHES
     benches = dict(ALL_BENCHES)
+    benches.update(PS_BENCHES)
 
     if not args.skip_roofline:
         from benchmarks.roofline_report import roofline_rows
@@ -35,12 +44,28 @@ def main() -> None:
         benches["roofline_multi_pod"] = \
             lambda: roofline_rows("dryrun_multi_pod.jsonl")
 
+    selected = None if args.only is None else {
+        n.strip() for n in args.only.split(",") if n.strip()}
+    if selected:
+        unknown = selected - set(benches)
+        if unknown:
+            raise SystemExit(f"unknown benches {sorted(unknown)}; choose "
+                             f"from {sorted(benches)}")
+
+    results = {}
     for name, fn in benches.items():
-        if args.only and name != args.only:
+        if selected and name not in selected:
             continue
         t0 = time.perf_counter()
         rows = fn()
-        _print_block(name, rows, time.perf_counter() - t0)
+        elapsed = time.perf_counter() - t0
+        _print_block(name, rows, elapsed)
+        results[name] = {"elapsed_s": round(elapsed, 3), "rows": rows}
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json_out} ({len(results)} benches)")
 
 
 if __name__ == "__main__":

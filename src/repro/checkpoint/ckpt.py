@@ -35,7 +35,12 @@ def save_checkpoint(path: str, tree: Any, *, step: int | None = None) -> None:
 
 
 def load_checkpoint(path: str, template: Any):
-    """Returns (tree_like_template, step_or_None)."""
+    """Returns (tree_like_template, step_or_None).
+
+    Text leaves in the template (numpy unicode/bytes kinds) are restored
+    as stored: their dtype width varies with content (JSON-encoded
+    metadata, plan descriptions), so no shape/dtype check applies.
+    """
     data = np.load(path)
     flat_t = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
@@ -43,6 +48,9 @@ def load_checkpoint(path: str, template: Any):
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                        for q in p)
         arr = data[key]
+        if np.asarray(leaf).dtype.kind in ("U", "S"):
+            leaves.append(arr)
+            continue
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")

@@ -1,39 +1,44 @@
 """DynaComm core: the paper's contribution (scheduling) as a library."""
 
-from repro.core.costmodel import (LayerCosts, Segment, backward_time,
-                                  forward_time, iteration_time)
+from repro.core.costmodel import (LayerCosts, Segment, TopologyCosts,
+                                  backward_time, forward_time, iteration_time)
 from repro.core.dp import DPResult, dp_backward, dp_forward, dynacomm_schedule
 from repro.core.greedy import ibatch_backward, ibatch_forward, ibatch_schedule
 from repro.core.baselines import (lbl_backward, lbl_forward,
                                   sequential_backward, sequential_forward)
 from repro.core.bruteforce import bruteforce_backward, bruteforce_forward
 from repro.core.scheduler import (STRATEGIES, Decision, DynaCommScheduler,
-                                  evaluate, schedule)
-from repro.core.buckets import BucketPlan, plan_from_decision
-from repro.core.profiler import (LayerProfile, LayerTimingHook,
-                                 costs_from_profiles, measure_layer_costs,
-                                 random_costs)
+                                  consensus_decision, evaluate, schedule,
+                                  schedule_topology)
+from repro.core.buckets import (BucketPlan, decision_from_plan,
+                                plan_from_decision)
+from repro.core.profiler import (EwmaDriftDetector, LayerProfile,
+                                 LayerTimingHook, costs_from_profiles,
+                                 measure_layer_costs, random_costs)
 from repro.core.netmodel import (EdgeNetworkModel, NetworkSchedule,
                                  TPUSystemModel, TPU_HBM_BW,
                                  TPU_ICI_BW_PER_LINK, TPU_PEAK_FLOPS_BF16,
                                  as_schedule, bandwidth_shift)
-from repro.core.simulator import (IterationTimeline, check_partial_orders,
-                                  simulate_backward, simulate_forward,
-                                  simulate_iteration)
+from repro.core.simulator import (IterationTimeline, PSTimeline,
+                                  check_partial_orders, simulate_backward,
+                                  simulate_forward, simulate_iteration,
+                                  simulate_ps_iteration)
 
 __all__ = [
-    "LayerCosts", "Segment", "forward_time", "backward_time", "iteration_time",
+    "LayerCosts", "Segment", "TopologyCosts",
+    "forward_time", "backward_time", "iteration_time",
     "DPResult", "dp_forward", "dp_backward", "dynacomm_schedule",
     "ibatch_forward", "ibatch_backward", "ibatch_schedule",
     "lbl_forward", "lbl_backward", "sequential_forward", "sequential_backward",
     "bruteforce_forward", "bruteforce_backward",
     "STRATEGIES", "Decision", "DynaCommScheduler", "evaluate", "schedule",
-    "BucketPlan", "plan_from_decision",
-    "LayerProfile", "LayerTimingHook", "costs_from_profiles",
-    "measure_layer_costs", "random_costs",
+    "schedule_topology", "consensus_decision",
+    "BucketPlan", "plan_from_decision", "decision_from_plan",
+    "EwmaDriftDetector", "LayerProfile", "LayerTimingHook",
+    "costs_from_profiles", "measure_layer_costs", "random_costs",
     "EdgeNetworkModel", "NetworkSchedule", "TPUSystemModel",
     "as_schedule", "bandwidth_shift",
     "TPU_HBM_BW", "TPU_ICI_BW_PER_LINK", "TPU_PEAK_FLOPS_BF16",
-    "IterationTimeline", "simulate_forward", "simulate_backward",
-    "simulate_iteration", "check_partial_orders",
+    "IterationTimeline", "PSTimeline", "simulate_forward", "simulate_backward",
+    "simulate_iteration", "simulate_ps_iteration", "check_partial_orders",
 ]

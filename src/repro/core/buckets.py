@@ -42,5 +42,21 @@ def plan_from_decision(fwd_segments: Sequence[Segment],
     return BucketPlan(forward=fwd, backward=bwd)
 
 
+def decision_from_plan(plan: BucketPlan) -> Tuple[Tuple[Segment, ...],
+                                                  Tuple[Segment, ...]]:
+    """Inverse of :func:`plan_from_decision` — 1-indexed segments.
+
+    Round-trips: ``decision_from_plan(plan_from_decision(f, b, L)) ==
+    (f, b)`` for any valid decision."""
+    if not plan.forward or not plan.backward:
+        raise ValueError("plan has no buckets")
+    fwd = tuple((min(b) + 1, max(b) + 1) for b in plan.forward)
+    bwd = tuple((min(b) + 1, max(b) + 1) for b in plan.backward)
+    L = max(hi for _, hi in fwd)
+    validate_forward_segments(fwd, L)
+    validate_backward_segments(bwd, L)
+    return fwd, bwd
+
+
 def flat_layer_order(plan_groups: Tuple[Tuple[int, ...], ...]) -> Tuple[int, ...]:
     return tuple(l for group in plan_groups for l in group)

@@ -37,6 +37,9 @@ class LayerCosts:
     bc: backward-computation cost per layer
     gt: gradient-transmission cost per layer
     dt: fixed overhead per transmission mini-procedure (Δt)
+    dt_bwd: optional distinct Δt for the backward (push) direction — an
+        asymmetric link (parameter-server downlink vs uplink) pays different
+        setup costs per direction.  ``None`` means symmetric (= ``dt``).
     """
 
     pt: np.ndarray
@@ -44,6 +47,7 @@ class LayerCosts:
     bc: np.ndarray
     gt: np.ndarray
     dt: float
+    dt_bwd: float | None = None
 
     def __post_init__(self):
         for name in ("pt", "fc", "bc", "gt"):
@@ -57,24 +61,39 @@ class LayerCosts:
                 raise ValueError(f"{name} has negative costs")
         if self.dt < 0:
             raise ValueError("dt must be non-negative")
+        if self.dt_bwd is not None and self.dt_bwd < 0:
+            raise ValueError("dt_bwd must be non-negative")
 
     @property
     def num_layers(self) -> int:
         return int(self.pt.shape[0])
 
+    @property
+    def dt_push(self) -> float:
+        """Δt of a gradient push (backward direction); ``dt`` if symmetric."""
+        return self.dt if self.dt_bwd is None else self.dt_bwd
+
     def scaled(self, *, compute: float = 1.0, comm: float = 1.0,
-               dt: float | None = None) -> "LayerCosts":
+               dt: float | None = None,
+               dt_bwd: float | None = None) -> "LayerCosts":
         """Return a copy with compute / communication costs rescaled.
 
         Used by the sensitivity studies (paper Fig. 9): ``compute`` scales
         fc/bc (∝ batch size), ``comm`` scales pt/gt (∝ 1/bandwidth).
+
+        Overriding ``dt`` alone yields a *symmetric* copy (any ``dt_bwd``
+        of the original is dropped — the Δt sweeps study one overhead
+        knob); pass ``dt_bwd`` too to set the push direction explicitly.
         """
+        if dt_bwd is not None and dt is None:
+            raise ValueError("dt_bwd override requires dt")
         return LayerCosts(
             pt=self.pt * comm,
             fc=self.fc * compute,
             bc=self.bc * compute,
             gt=self.gt * comm,
             dt=self.dt if dt is None else dt,
+            dt_bwd=self.dt_bwd if dt is None else dt_bwd,
         )
 
 
@@ -193,7 +212,8 @@ def backward_time(costs: LayerCosts, segments: Sequence[Segment]) -> float:
     t_comm = 0.0
     for lo, hi in segments:
         t_comp += float(np.sum(costs.bc[lo - 1:hi]))
-        t_comm = max(t_comm, t_comp) + costs.dt + float(np.sum(costs.gt[lo - 1:hi]))
+        t_comm = max(t_comm, t_comp) + costs.dt_push \
+            + float(np.sum(costs.gt[lo - 1:hi]))
     return t_comm
 
 
@@ -203,6 +223,61 @@ def iteration_time(costs: LayerCosts,
     """Total iteration time: forward phase then backward phase (eq. 3 chains
     them — bc_L cannot start before fc_L ends)."""
     return forward_time(costs, fwd_segments) + backward_time(costs, bwd_segments)
+
+
+# ---------------------------------------------------------------------------
+# Per-topology costs (parameter-server regime: W workers, each with its own
+# compute rate and its own asymmetric link to the server shards)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyCosts:
+    """One ``LayerCosts`` per worker of a PS topology.
+
+    The cluster-level ``LayerCosts`` models one homogeneous worker pool
+    behind one link; a PS topology has per-worker fc/bc (heterogeneous edge
+    hardware) and per-link pt/gt/Δt (asymmetric, per-worker up/down paths),
+    so DynaComm must plan per worker — or pick one shared plan that
+    minimizes the synchronous straggler (see
+    ``repro.core.scheduler.consensus_decision``).
+    """
+
+    workers: Tuple[LayerCosts, ...]
+
+    def __post_init__(self):
+        workers = tuple(self.workers)
+        object.__setattr__(self, "workers", workers)
+        if not workers:
+            raise ValueError("TopologyCosts needs at least one worker")
+        Ls = {c.num_layers for c in workers}
+        if len(Ls) != 1:
+            raise ValueError(f"workers disagree on layer count: {sorted(Ls)}")
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.workers)
+
+    @property
+    def num_layers(self) -> int:
+        return self.workers[0].num_layers
+
+    def iteration_times(self, fwd_segments: Sequence[Segment],
+                        bwd_segments: Sequence[Segment]) -> Tuple[float, ...]:
+        """Per-worker iteration time under one shared decision."""
+        return tuple(iteration_time(c, fwd_segments, bwd_segments)
+                     for c in self.workers)
+
+    def makespan(self, fwd_segments: Sequence[Segment],
+                 bwd_segments: Sequence[Segment]) -> float:
+        """Synchronous-mode iteration time: the straggler's finish."""
+        return max(self.iteration_times(fwd_segments, bwd_segments))
+
+    def straggler(self, fwd_segments: Sequence[Segment],
+                  bwd_segments: Sequence[Segment]) -> int:
+        """Index of the worker that gates the synchronous barrier."""
+        times = self.iteration_times(fwd_segments, bwd_segments)
+        return int(np.argmax(times))
 
 
 # ---------------------------------------------------------------------------

@@ -113,7 +113,7 @@ def dp_backward(costs: LayerCosts) -> DPResult:
         prev = B[:, n - 1]
         ready = bc_pref                              # compute-done time per m
         # cand[m, k] = max(prev[k], ready[m]) + Δt + (gt_pref[m] - gt_pref[k])
-        cand = np.maximum(prev[None, :], ready[:, None]) + costs.dt \
+        cand = np.maximum(prev[None, :], ready[:, None]) + costs.dt_push \
             + gt_pref[:, None] - gt_pref[None, :]
         cand[ms[:, None] <= ms[None, :]] = _INF
         ks = np.argmin(cand, axis=1)

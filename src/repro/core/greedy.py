@@ -101,7 +101,7 @@ def ibatch_backward(costs: LayerCosts) -> Tuple[Tuple[Segment, ...], float]:
         bounds = [L + 1, n]   # first segment = layers L..n
         k, m = 1, n
         while m != 1:
-            slack = {x: k * costs.dt + gt_sum(m, L) - bc_sum(x, m - 1)
+            slack = {x: k * costs.dt_push + gt_sum(m, L) - bc_sum(x, m - 1)
                      for x in range(1, m)}
             options = [x for x, s in slack.items() if s >= 0]
             j = (min(options, key=lambda x: slack[x]) if options

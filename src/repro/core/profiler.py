@@ -177,6 +177,88 @@ class LayerTimingHook:
         self._samples.clear()
 
 
+class EwmaDriftDetector:
+    """Detect run-time drift from *observed* step times (no scripted
+    ``NetworkSchedule`` needed).
+
+    Keeps an exponentially-weighted moving average of per-step wall time;
+    when ``patience`` consecutive samples deviate from the baseline by more
+    than ``threshold`` (relative), :meth:`update` returns ``True`` once and
+    the baseline re-seeds from the drifted sample — so a persistent shift
+    (the uplink degraded, a worker slowed down) fires exactly one trigger,
+    while one-off stragglers (GC pause, preemption blip) are absorbed.
+
+    The first ``warmup`` samples only seed the baseline (they include
+    compile time and cache-cold effects) and can never trigger.
+    """
+
+    def __init__(self, *, alpha: float = 0.2, threshold: float = 0.3,
+                 patience: int = 3, warmup: int = 2):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if threshold <= 0.0:
+            raise ValueError(f"threshold must be > 0, got {threshold}")
+        if patience < 1:
+            raise ValueError(f"patience must be >= 1, got {patience}")
+        if warmup < 0:
+            raise ValueError(f"warmup must be >= 0, got {warmup}")
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.warmup = warmup
+        self.reset()
+
+    @property
+    def baseline(self) -> float | None:
+        """Current EWMA of non-drifting step times (None before samples)."""
+        return self._ewma
+
+    @property
+    def num_triggers(self) -> int:
+        return self._triggers
+
+    def update(self, seconds: float) -> bool:
+        """Feed one observed step time; True ⇒ drift detected this step."""
+        if seconds < 0:
+            raise ValueError(f"step time must be >= 0, got {seconds}")
+        self._seen += 1
+        if self._seen <= self.warmup or self._ewma is None:
+            # warmup seeds (and re-seeds after a reset) the baseline
+            self._ewma = seconds if self._ewma is None else (
+                self.alpha * seconds + (1 - self.alpha) * self._ewma)
+            return False
+        rel = abs(seconds - self._ewma) / max(self._ewma, 1e-12)
+        if rel > self.threshold:
+            self._streak += 1
+            if self._streak >= self.patience:
+                # persistent shift: trigger once, re-seed from the new regime
+                self._ewma = seconds
+                self._streak = 0
+                self._triggers += 1
+                return True
+            return False                 # suspicious, but within patience
+        self._streak = 0
+        self._ewma = self.alpha * seconds + (1 - self.alpha) * self._ewma
+        return False
+
+    def state_dict(self) -> dict:
+        """Checkpointable detector state (baseline, counters)."""
+        return {"ewma": self._ewma, "seen": self._seen,
+                "streak": self._streak, "triggers": self._triggers}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._ewma = None if state["ewma"] is None else float(state["ewma"])
+        self._seen = int(state["seen"])
+        self._streak = int(state["streak"])
+        self._triggers = int(state["triggers"])
+
+    def reset(self) -> None:
+        self._ewma: float | None = None
+        self._seen = 0
+        self._streak = 0
+        self._triggers = 0
+
+
 def random_costs(L: int, *, seed: int = 0, dt: float = 1e-2,
                  comm_scale: float = 1.0, comp_scale: float = 1.0) -> LayerCosts:
     """Randomly generated profiling results (paper Fig. 12 methodology)."""

@@ -18,8 +18,8 @@ import time
 from typing import Callable, Dict, Tuple
 
 from repro.core import baselines, bruteforce, dp, greedy
-from repro.core.costmodel import (LayerCosts, Segment, backward_time,
-                                  forward_time, iteration_time)
+from repro.core.costmodel import (LayerCosts, Segment, TopologyCosts,
+                                  backward_time, forward_time, iteration_time)
 
 Decision = Tuple[Tuple[Segment, ...], Tuple[Segment, ...]]  # (forward, backward)
 
@@ -67,6 +67,31 @@ def schedule(costs: LayerCosts, strategy: str) -> Decision:
                          f"choose from {sorted(STRATEGIES)}") from None
 
 
+def schedule_topology(topo: TopologyCosts, strategy: str
+                      ) -> Tuple[Decision, ...]:
+    """One independent decision per worker of a PS topology.
+
+    This is the *asynchronous* planning mode: each edge worker overlaps its
+    own link with its own compute, so the optimal decomposition differs per
+    worker (a slow uplink wants few large pushes; a fast one wants
+    layer-wise overlap)."""
+    return tuple(schedule(c, strategy) for c in topo.workers)
+
+
+def consensus_decision(topo: TopologyCosts, strategy: str
+                       ) -> Tuple[Decision, float]:
+    """One shared decision for synchronous-mode PS training.
+
+    A bulk-synchronous step compiles a single program, so every worker must
+    run the same segmentation; the iteration ends when the straggler
+    finishes.  Each worker's individually-optimal decision is a candidate;
+    the one minimizing the *synchronous makespan* (max over workers) wins.
+    Returns ``(decision, makespan_seconds)``."""
+    candidates = list(dict.fromkeys(schedule_topology(topo, strategy)))
+    best = min(candidates, key=lambda d: topo.makespan(*d))
+    return best, topo.makespan(*best)
+
+
 def evaluate(costs: LayerCosts, decision: Decision) -> Dict[str, float]:
     f, b = decision
     return {
@@ -110,6 +135,26 @@ class DynaCommScheduler:
         (Δt + gt_i^1) while the last gradient push is in flight."""
         window = costs.dt + float(costs.gt[0])
         return self.last_scheduling_seconds <= window
+
+    def invalidate(self) -> None:
+        """Drop the cached decision so the next iteration re-schedules
+        (drift detected mid-epoch) without disturbing the iteration
+        counter's epoch alignment."""
+        self._decision = None
+
+    def state_dict(self) -> Dict[str, object]:
+        """Checkpointable loop state (decision in segment form)."""
+        return {"iter_seen": self._iter_seen,
+                "decision": self._decision,
+                "last_scheduling_seconds": self.last_scheduling_seconds}
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        self._iter_seen = int(state["iter_seen"])
+        d = state["decision"]
+        self._decision = None if d is None else (
+            tuple(tuple(s) for s in d[0]), tuple(tuple(s) for s in d[1]))
+        self.last_scheduling_seconds = float(
+            state.get("last_scheduling_seconds", 0.0))
 
     def reset(self) -> None:
         self._decision = None

@@ -18,7 +18,8 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 from repro.core.costmodel import (LayerCosts, PhaseBreakdown, Segment,
-                                  phase_breakdown, validate_backward_segments,
+                                  TopologyCosts, phase_breakdown,
+                                  validate_backward_segments,
                                   validate_forward_segments)
 
 
@@ -83,7 +84,7 @@ def simulate_backward(costs: LayerCosts,
             comp_free = end
         # gradient push once the whole segment's grads exist (eq. 2)
         start = max(link_free, comp_free)
-        dur = costs.dt + float(np.sum(costs.gt[lo - 1:hi]))
+        dur = costs.dt_push + float(np.sum(costs.gt[lo - 1:hi]))
         events.append(Event("gt", (lo, hi), start, start + dur))
         link_free = start + dur
     return events, link_free
@@ -95,6 +96,56 @@ def simulate_iteration(costs: LayerCosts,
     f_events, f_t = simulate_forward(costs, fwd_segments)
     b_events, b_t = simulate_backward(costs, bwd_segments)
     return IterationTimeline(tuple(f_events), tuple(b_events), f_t, b_t)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSTimeline:
+    """Per-worker timelines of one parameter-server iteration.
+
+    Every worker runs the paper's pull → forward → backward → push pipeline
+    against its own link; in synchronous mode the iteration ends at the
+    straggler's last gradient push (``makespan``), and ``barrier_waits``
+    is each worker's idle time at the barrier — the quantity asynchronous
+    bounded-staleness execution reclaims."""
+
+    workers: Tuple[IterationTimeline, ...]
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.workers)
+
+    @property
+    def makespan(self) -> float:
+        return max(t.total for t in self.workers)
+
+    @property
+    def straggler(self) -> int:
+        totals = [t.total for t in self.workers]
+        return int(np.argmax(totals))
+
+    @property
+    def barrier_waits(self) -> Tuple[float, ...]:
+        span = self.makespan
+        return tuple(span - t.total for t in self.workers)
+
+
+def simulate_ps_iteration(topo: TopologyCosts,
+                          decisions) -> PSTimeline:
+    """Simulate one PS iteration over every worker of a topology.
+
+    ``decisions`` is either one shared ``(fwd, bwd)`` decision (synchronous
+    mode) or a sequence of per-worker decisions (one per worker, the
+    asynchronous planning mode)."""
+    if len(decisions) == 2 and decisions[0] and \
+            isinstance(decisions[0][0], tuple) and \
+            isinstance(decisions[0][0][0], (int, np.integer)):
+        decisions = [decisions] * topo.num_workers
+    if len(decisions) != topo.num_workers:
+        raise ValueError(f"got {len(decisions)} decisions for "
+                         f"{topo.num_workers} workers")
+    return PSTimeline(workers=tuple(
+        simulate_iteration(costs, f, b)
+        for costs, (f, b) in zip(topo.workers, decisions)))
 
 
 def check_partial_orders(timeline: IterationTimeline, L: int) -> None:

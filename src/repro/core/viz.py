@@ -7,10 +7,12 @@ decomposition decision does to the overlap structure.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
-from repro.core.costmodel import LayerCosts, Segment
-from repro.core.simulator import simulate_backward, simulate_forward
+from repro.core.costmodel import LayerCosts, Segment, TopologyCosts
+from repro.core.simulator import (simulate_backward, simulate_forward,
+                                  simulate_ps_iteration)
 
 
 def _lane(events, t_end: float, width: int, fill: str) -> str:
@@ -44,4 +46,34 @@ def render_timeline(costs: LayerCosts, segments: Sequence[Segment], *,
         "link    |" + _lane(comm, t_end, width, "=") + "|",
         "compute |" + _lane(comp, t_end, width, "#") + "|",
     ]
+    return "\n".join(lines)
+
+
+def render_ps_timeline(topo: TopologyCosts, decisions, *,
+                       width: int = 78) -> str:
+    """Per-worker lanes of one PS iteration, on a shared time axis.
+
+    Each worker gets a link lane (``=`` pulls / pushes, labelled with the
+    1-indexed layer range of the segment) and a compute lane (``#``); all
+    lanes are normalized to the topology *makespan* so straggling and
+    barrier idle time are visible at a glance.  ``decisions`` follows
+    :func:`repro.core.simulator.simulate_ps_iteration` (one shared decision
+    or one per worker)."""
+    tl = simulate_ps_iteration(topo, decisions)
+    span = tl.makespan
+    lines = [f"PS iteration: {tl.num_workers} worker(s), makespan "
+             f"{span:.4f}s (straggler: worker {tl.straggler})"]
+    for w, wtl in enumerate(tl.workers):
+        fwd, bwd = wtl.forward_events, wtl.backward_events
+        # backward events happen after the forward phase on this worker
+        shifted = [dataclasses.replace(e, start=e.start + wtl.forward_time,
+                                       end=e.end + wtl.forward_time)
+                   for e in bwd]
+        comm = [e for e in list(fwd) + shifted if e.kind in ("pt", "gt")]
+        comp = [e for e in list(fwd) + shifted if e.kind in ("fc", "bc")]
+        wait = span - wtl.total
+        lines.append(f"worker {w}: iter {wtl.total:.4f}s, barrier wait "
+                     f"{wait:.4f}s")
+        lines.append("  link    |" + _lane(comm, span, width, "=") + "|")
+        lines.append("  compute |" + _lane(comp, span, width, "#") + "|")
     return "\n".join(lines)

@@ -107,6 +107,12 @@ def unflatten_tree(flat: jnp.ndarray, spec: FlatSpec) -> Any:
     return jax.tree_util.tree_unflatten(spec.treedef, leaves)
 
 
+def bucket_bytes(specs: Sequence[FlatSpec], bucket: Sequence[int]) -> int:
+    """Unpadded payload bytes of one segment's transmission (f32 flats)."""
+    return sum(specs[l].total * jnp.dtype(FLAT_DTYPE).itemsize
+               for l in bucket)
+
+
 # ---------------------------------------------------------------------------
 # Bucket collectives (shard_map-internal)
 # ---------------------------------------------------------------------------

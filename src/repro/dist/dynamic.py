@@ -31,12 +31,15 @@ plan sequence statically (asserted by ``tests/test_dynamic.py``).
 from __future__ import annotations
 
 import dataclasses
+import json
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.buckets import BucketPlan, plan_from_decision
 from repro.core.costmodel import LayerCosts
@@ -64,7 +67,7 @@ def sequential_plan(num_layers: int) -> BucketPlan:
 
 @dataclasses.dataclass(frozen=True)
 class RescheduleEvent:
-    """One per-epoch scheduling pass (paper Table I bookkeeping)."""
+    """One scheduling pass (paper Table I bookkeeping)."""
 
     step: int                     # global step index at the epoch boundary
     epoch: int
@@ -73,6 +76,7 @@ class RescheduleEvent:
     retraced: bool                # False ⇒ compiled-step cache hit (or no swap)
     scheduling_seconds: float     # wall time of the DP re-plan
     overhead_hidden: bool         # fits in the Δt + gt¹ idle window (Table I)
+    trigger: str = "epoch"        # "epoch" boundary | "drift" detector
 
 
 @dataclasses.dataclass
@@ -95,6 +99,9 @@ class DynamicTrainer:
     compute_flops_per_s: Optional[float] = 1e12
     measure_iters: int = 3
     measure_warmup: int = 1
+    remeasure_every: int = 1      # epochs between fc/bc re-measurements;
+                                  # 0 = measure once (pre-PR-3 behavior)
+    drift_detector: Optional[Any] = None   # e.g. core.EwmaDriftDetector
     zero3: bool = False
     axis_name: str = "data"
     aux_weight: float = 0.01
@@ -106,6 +113,9 @@ class DynamicTrainer:
         if self.cost_source not in ("analytic", "measured"):
             raise ValueError(f"cost_source must be 'analytic' or 'measured', "
                              f"got {self.cost_source!r}")
+        if self.remeasure_every < 0:
+            raise ValueError(f"remeasure_every must be >= 0, got "
+                             f"{self.remeasure_every}")
         self.network: NetworkSchedule = as_schedule(self.network)
         self.scheduler = DynaCommScheduler(strategy=self.strategy,
                                            reschedule_every=self.steps_per_epoch)
@@ -127,6 +137,8 @@ class DynamicTrainer:
         self._step_fn: Optional[Callable] = None
         self._costs: Optional[LayerCosts] = None
         self._measured_fc_bc: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._measured_epoch = -1
+        self._drift_pending = False
 
     # ------------------------------------------------------------------
     # state / introspection
@@ -172,17 +184,28 @@ class DynamicTrainer:
         B, T = batch["tokens"].shape
         return InputShape("dynamic", int(T), int(B), "train")
 
-    def costs_for_epoch(self, epoch: int, state, batch) -> LayerCosts:
+    def costs_for_epoch(self, epoch: int, state, batch, *,
+                        remeasure: bool = False) -> LayerCosts:
         """fc/bc from the configured source; pt/gt/Δt from the epoch's
-        network model."""
+        network model.
+
+        With ``cost_source="measured"``, fc/bc are re-measured every
+        ``remeasure_every`` re-schedule epochs (so *compute* drift — a
+        thermally throttled edge device, a contended CPU — is seen, not
+        just network drift); ``remeasure=True`` forces a fresh measurement
+        (the drift-detector path).
+        """
         net = self.network.model_at(epoch)
         if self.cost_source == "analytic":
             return costs_from_profiles(
                 layer_profiles(self.cfg, self._input_shape_for(batch)),
                 net=net, compute_flops_per_s=self.compute_flops_per_s)
-        if self._measured_fc_bc is None:
+        stale = (self.remeasure_every > 0 and
+                 epoch - self._measured_epoch >= self.remeasure_every)
+        if self._measured_fc_bc is None or stale or remeasure:
             measured = self.measure_costs(state, batch, net=net)
             self._measured_fc_bc = (measured.fc, measured.bc)
+            self._measured_epoch = epoch
             return measured
         fc, bc = self._measured_fc_bc
         pb = np.asarray(model_lib.sched_layer_bytes(self.cfg), np.float64)
@@ -256,19 +279,27 @@ class DynamicTrainer:
     # ------------------------------------------------------------------
 
     def _maybe_reschedule(self, i: int, state, batch) -> None:
-        boundary = i % self.steps_per_epoch == 0
+        drift = self._drift_pending
+        self._drift_pending = False
+        boundary = i % self.steps_per_epoch == 0 or drift
         if boundary:
             self._costs = self.costs_for_epoch(i // self.steps_per_epoch,
-                                               state, batch)
+                                               state, batch, remeasure=drift)
+            if drift:
+                self.scheduler.invalidate()
         decision = self.scheduler.decision_for_iteration(self._costs)
-        if not boundary and decision == self._decision:
+        changed = decision != self._decision
+        # (``_step_fn is None`` off-boundary ⇒ loop state was just restored
+        # from a checkpoint: recompile the active plan, no scheduling event)
+        if not boundary and not changed and self._step_fn is not None:
             return
         plan = plan_from_decision(*decision, self.base.num_layers)
         prev = self._plan
         retraced = False
-        if plan != prev:
+        if plan != prev or self._step_fn is None:
             if plan in self._step_cache:
-                self.cache_hits += 1
+                if plan != prev:
+                    self.cache_hits += 1
             else:
                 retraced = True
                 self.traces += 1
@@ -280,21 +311,125 @@ class DynamicTrainer:
             self._step_fn = self._step_cache[plan]
             self._plan = plan
         self._decision = decision
-        self.events.append(RescheduleEvent(
-            step=i, epoch=i // self.steps_per_epoch, plan=plan,
-            plan_changed=prev is not None and plan != prev,
-            retraced=retraced,
-            scheduling_seconds=self.scheduler.last_scheduling_seconds,
-            overhead_hidden=self.scheduler.scheduling_overhead_hidden(
-                self._costs)))
+        if boundary or changed:
+            self.events.append(RescheduleEvent(
+                step=i, epoch=i // self.steps_per_epoch, plan=plan,
+                plan_changed=prev is not None and plan != prev,
+                retraced=retraced,
+                scheduling_seconds=self.scheduler.last_scheduling_seconds,
+                overhead_hidden=self.scheduler.scheduling_overhead_hidden(
+                    self._costs),
+                trigger="drift" if drift else "epoch"))
 
     def step(self, state, batch):
-        """One training step; re-plans (and maybe re-buckets) on epoch
-        boundaries.  Returns ``(new_state, mean_loss)``."""
+        """One training step; re-plans on epoch boundaries — and, when a
+        ``drift_detector`` is attached, whenever *observed* step times
+        shift persistently (the detector's verdict applies from the next
+        step).  Returns ``(new_state, mean_loss)``."""
         self._maybe_reschedule(self._step_idx, state, batch)
-        new_state, loss = self._step_fn(state, batch)
+        if self.drift_detector is None:
+            new_state, loss = self._step_fn(state, batch)
+        else:
+            t0 = time.perf_counter()
+            new_state, loss = self._step_fn(state, batch)
+            jax.block_until_ready(loss)
+            if self.drift_detector.update(time.perf_counter() - t0):
+                self._drift_pending = True
         self._step_idx += 1
         return new_state, loss
+
+    # ------------------------------------------------------------------
+    # loop-state checkpointing (``repro.checkpoint``)
+    #
+    # The *model* state is checkpointed separately (it is an ordinary
+    # pytree); these methods capture the dynamic-loop bookkeeping — the
+    # step/scheduler iteration counters, the active decision/plan, and
+    # the RescheduleEvent history — so a resumed run re-schedules on the
+    # same epoch boundaries and replays the same plan sequence.  Compiled
+    # steps are not serializable; the restored plan recompiles lazily on
+    # the first post-restore step (no scheduling event is recorded).
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _plan_to_obj(plan: Optional[BucketPlan]):
+        if plan is None:
+            return None
+        return {"forward": [list(b) for b in plan.forward],
+                "backward": [list(b) for b in plan.backward]}
+
+    @staticmethod
+    def _plan_from_obj(obj) -> Optional[BucketPlan]:
+        if obj is None:
+            return None
+        return BucketPlan(
+            forward=tuple(tuple(b) for b in obj["forward"]),
+            backward=tuple(tuple(b) for b in obj["backward"]))
+
+    def loop_state(self) -> Dict[str, np.ndarray]:
+        """The dynamic-loop bookkeeping as a checkpointable pytree."""
+        meta = {
+            "scheduler": self.scheduler.state_dict(),
+            "plan": self._plan_to_obj(self._plan),
+            "drift_pending": self._drift_pending,
+            "drift_detector": (self.drift_detector.state_dict()
+                               if self.drift_detector is not None and
+                               hasattr(self.drift_detector, "state_dict")
+                               else None),
+            "events": [{
+                "step": e.step, "epoch": e.epoch,
+                "plan": self._plan_to_obj(e.plan),
+                "plan_changed": e.plan_changed, "retraced": e.retraced,
+                "scheduling_seconds": e.scheduling_seconds,
+                "overhead_hidden": e.overhead_hidden, "trigger": e.trigger,
+            } for e in self.events],
+            "measured_epoch": self._measured_epoch,
+        }
+        state = {"step_idx": np.asarray(self._step_idx, np.int64),
+                 "meta": np.asarray(json.dumps(meta))}
+        if self._measured_fc_bc is not None:
+            fc, bc = self._measured_fc_bc
+            state["measured_fc"] = np.asarray(fc, np.float64)
+            state["measured_bc"] = np.asarray(bc, np.float64)
+        return state
+
+    def save_loop_state(self, path: str) -> None:
+        save_checkpoint(path, self.loop_state(), step=self._step_idx)
+
+    def restore_loop_state(self, path: str) -> None:
+        Ls = self.base.num_layers
+        template: Dict[str, np.ndarray] = {
+            "step_idx": np.zeros((), np.int64), "meta": np.asarray("")}
+        if self.cost_source == "measured":
+            with np.load(path) as probe:
+                has_measured = "measured_fc" in probe.files
+            if has_measured:       # absent ⇒ saved before 1st measurement
+                template["measured_fc"] = np.zeros((Ls,), np.float64)
+                template["measured_bc"] = np.zeros((Ls,), np.float64)
+        tree, _ = load_checkpoint(path, template)
+        meta = json.loads(str(tree["meta"]))
+        self._step_idx = int(tree["step_idx"])
+        sched = dict(meta["scheduler"])
+        self.scheduler.load_state_dict(sched)
+        self._decision = self.scheduler._decision
+        self._plan = self._plan_from_obj(meta["plan"])
+        self._measured_epoch = int(meta.get("measured_epoch", -1))
+        if "measured_fc" in tree:
+            self._measured_fc_bc = (np.asarray(tree["measured_fc"]),
+                                    np.asarray(tree["measured_bc"]))
+        self.events = [RescheduleEvent(
+            step=e["step"], epoch=e["epoch"],
+            plan=self._plan_from_obj(e["plan"]),
+            plan_changed=e["plan_changed"], retraced=e["retraced"],
+            scheduling_seconds=e["scheduling_seconds"],
+            overhead_hidden=e["overhead_hidden"],
+            trigger=e.get("trigger", "epoch")) for e in meta["events"]]
+        self._step_fn = None       # recompiled lazily on the next step
+        self._costs = None
+        self._drift_pending = bool(meta.get("drift_pending", False))
+        det_state = meta.get("drift_detector")
+        if det_state is not None and self.drift_detector is not None and \
+                hasattr(self.drift_detector, "load_state_dict"):
+            self.drift_detector.load_state_dict(det_state)
 
     def run(self, state, batch_fn: Callable[[int], Any], num_steps: int, *,
             log_every: int = 0):

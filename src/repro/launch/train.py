@@ -1,6 +1,6 @@
 """Training launcher: ``--arch <id>`` + input shape + strategy.
 
-Three runtimes:
+Four runtimes:
 
 * ``--runtime local`` (default) — single-process jit training on whatever
   devices exist; reduced configs runnable on CPU.
@@ -11,7 +11,14 @@ Three runtimes:
   scheduler re-plans every ``--steps-per-epoch`` steps against the active
   network model and swaps compiled steps when the decision changes.  Pair
   with ``--bw-shift-gbps`` to script a bandwidth drift and watch the
-  schedule re-segment mid-training.
+  schedule re-segment mid-training; ``--drift-detect`` re-schedules from
+  *observed* step times instead.
+* ``--runtime ps`` — the parameter-server subsystem (the paper's actual
+  topology): ``--ps-servers`` shards × one worker per device behind
+  asymmetric ``--down-gbps``/``--up-gbps`` links, consensus-planned via
+  the per-topology cost model.  Synchronous by default;
+  ``--staleness k`` switches to bounded-staleness asynchronous execution
+  (host-level event loop, one logical worker per ``--ps-workers``).
 
 Examples::
 
@@ -24,6 +31,10 @@ Examples::
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --reduced --runtime dynamic --steps 60 --steps-per-epoch 20 \
         --bw-gbps 10 --bw-shift-gbps 1 --shift-epoch 1
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --reduced --runtime ps --ps-servers 2 --down-gbps 10 --up-gbps 1 \
+        --steps 30
 """
 
 from __future__ import annotations
@@ -51,7 +62,7 @@ def main() -> None:
     ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant (CPU-friendly)")
-    ap.add_argument("--runtime", choices=("local", "zero", "dynamic"),
+    ap.add_argument("--runtime", choices=("local", "zero", "dynamic", "ps"),
                     default="local")
     ap.add_argument("--strategy", default="dynacomm",
                     choices=("sequential", "lbl", "ibatch", "dynacomm"))
@@ -65,6 +76,22 @@ def main() -> None:
     ap.add_argument("--shift-epoch", type=int, default=1)
     ap.add_argument("--cost-source", choices=("analytic", "measured"),
                     default="analytic")
+    ap.add_argument("--drift-detect", action="store_true",
+                    help="dynamic runtime: also re-schedule when observed "
+                         "step times drift (EWMA detector)")
+    # parameter-server knobs (ps runtime)
+    ap.add_argument("--ps-servers", type=int, default=2,
+                    help="number of server shards")
+    ap.add_argument("--ps-workers", type=int, default=None,
+                    help="async mode only: logical worker count "
+                         "(sync mode runs one worker per device)")
+    ap.add_argument("--down-gbps", type=float, default=10.0,
+                    help="server→worker (pull) bandwidth per link")
+    ap.add_argument("--up-gbps", type=float, default=1.0,
+                    help="worker→server (push) bandwidth per link")
+    ap.add_argument("--staleness", type=int, default=None,
+                    help="bounded-staleness k: switch the ps runtime to "
+                         "asynchronous execution")
     ap.add_argument("--worker-flops", type=float, default=1e10,
                     help="edge-worker compute rate fed to the profiler")
     ap.add_argument("--steps", type=int, default=100)
@@ -96,6 +123,10 @@ def main() -> None:
     mesh = Mesh(np.array(devs).reshape(len(devs),), ("data",))
     shape = InputShape("cli", args.seq, args.batch, "train")
 
+    if args.runtime == "ps":
+        _run_ps(args, cfg, mesh, opt, pipe, shape)
+        return
+
     if args.runtime == "dynamic":
         # run-time loop: re-profile + re-plan every epoch, swap compiled
         # steps when the decision changes
@@ -107,11 +138,22 @@ def main() -> None:
                                   at_epoch=args.shift_epoch)
         else:
             net = EdgeNetworkModel(bandwidth_bps=args.bw_gbps * 1e9)
+        detector = None
+        if args.drift_detect:
+            from repro.core import EwmaDriftDetector
+            detector = EwmaDriftDetector()
+            if args.cost_source == "analytic":
+                print("[dynamic] note: --drift-detect re-schedules from "
+                      "re-derived costs; with --cost-source analytic those "
+                      "only change with the scripted network schedule — "
+                      "pair with --cost-source measured to react to real "
+                      "compute drift")
         dyn = DynamicTrainer(cfg=cfg, mesh=mesh, optimizer=opt, network=net,
                              steps_per_epoch=args.steps_per_epoch,
                              strategy=args.strategy, input_shape=shape,
                              cost_source=args.cost_source,
-                             compute_flops_per_s=args.worker_flops)
+                             compute_flops_per_s=args.worker_flops,
+                             drift_detector=detector)
         print(f"[dynamic] {len(devs)} devices; strategy {args.strategy}, "
               f"re-plan every {args.steps_per_epoch} steps")
         state = dyn.init_state(jax.random.PRNGKey(0))
@@ -148,6 +190,77 @@ def main() -> None:
         if (i + 1) % 10 == 0:
             print(f"step {i + 1:4d}  loss {float(loss):.4f}  "
                   f"{(time.perf_counter() - t0) / (i + 1):.3f}s/step")
+
+
+def _run_ps(args, cfg, mesh, opt, pipe, shape) -> None:
+    """The parameter-server runtime: sync on the mesh, or async with a
+    bounded staleness k (host-level event loop over logical workers)."""
+    from repro.core import decision_from_plan
+    from repro.core.viz import render_ps_timeline
+    from repro.ps import AsyncPSTrainer, PSTopology, PSTrainer
+
+    n_dev = len(jax.devices())
+    if args.staleness is None:
+        topo = PSTopology.uniform(args.ps_servers, n_dev,
+                                  down_bps=args.down_gbps * 1e9,
+                                  up_bps=args.up_gbps * 1e9,
+                                  flops=args.worker_flops)
+        tr = PSTrainer.from_topology(cfg, mesh, topo, opt, shape,
+                                     strategy=args.strategy)
+        pulls, pushes = tr.expected_transfers
+        tb = tr.transfer_bytes()
+        print(f"[ps] sync: {topo.num_servers} shards x {topo.num_workers} "
+              f"workers; {args.strategy}: {pulls} pull / {pushes} push "
+              f"segments ({tb['pull'] / 1e6:.1f} MB down, "
+              f"{tb['push'] / 1e6:.1f} MB up per iter)")
+        print(render_ps_timeline(tr.topology_costs(shape),
+                                 decision_from_plan(tr.plan)))
+        state = tr.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(tr.build_train_step())
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            state, loss = step(state, pipe.batch(i))
+            if (i + 1) % 10 == 0:
+                print(f"step {i + 1:4d}  loss {float(loss):.4f}  "
+                      f"{(time.perf_counter() - t0) / (i + 1):.3f}s/step")
+        return
+
+    # async: logical workers against the versioned server
+    from repro.core import plan_from_decision, schedule
+    from repro.models import (init_params, num_sched_layers,
+                              params_from_sched_layers, sched_layer_trees,
+                              train_loss)
+    W = args.ps_workers or n_dev
+    topo = PSTopology.uniform(args.ps_servers, W,
+                              down_bps=args.down_gbps * 1e9,
+                              up_bps=args.up_gbps * 1e9,
+                              flops=args.worker_flops)
+    from repro.models.profiles import layer_profiles
+    costs = topo.topology_costs(layer_profiles(cfg, shape))
+    from repro.core.scheduler import consensus_decision
+    decision, makespan = consensus_decision(costs, args.strategy)
+    plan = plan_from_decision(*decision, num_sched_layers(cfg))
+    layers = sched_layer_trees(init_params(cfg, jax.random.PRNGKey(0)))
+
+    def loss_fn(layer_list, batch):
+        return train_loss(cfg, params_from_sched_layers(layer_list), batch,
+                          aux_weight=0.01)
+
+    tr = AsyncPSTrainer(init_layers=layers, loss_fn=loss_fn, optimizer=opt,
+                        topology=topo, plan=plan,
+                        staleness=args.staleness, costs=costs)
+    print(f"[ps] async: {topo.num_servers} shards x {W} logical workers, "
+          f"staleness bound k={args.staleness}; {args.strategy}: "
+          f"{len(plan.forward)} pull / {len(plan.backward)} push segments "
+          f"(sync makespan would be {makespan:.4f}s)")
+    log = tr.run(args.steps, lambda w, i: pipe.batch(w * 100003 + i))
+    acc = log.accepted
+    print(f"[ps] {len(acc)} pushes accepted, {log.num_rejected} rejected "
+          f"(stale), max staleness {log.max_staleness} <= k, simulated "
+          f"makespan {log.makespan:.4f}s")
+    for e in acc[:: max(1, len(acc) // 10)]:
+        print(f"  t={e.sim_time:8.4f}s worker {e.worker} v{e.version:3d} "
+              f"staleness {e.result.staleness}  loss {e.loss:.4f}")
 
 
 if __name__ == "__main__":

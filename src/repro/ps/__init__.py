@@ -1,0 +1,23 @@
+"""Parameter-Server execution subsystem — the paper's actual topology.
+
+``repro.dist`` executes DynaComm plans through symmetric ZeRO collectives
+(the TPU-native adaptation); this package executes them in the paper's
+own deployment shape: S server shards × W edge workers, segmented
+parameter pulls down and gradient pushes up over per-worker asymmetric
+links, synchronously (``PSTrainer``, bit-identical to the ZeRO trainer)
+or asynchronously under a bounded staleness ``k`` (``AsyncPSTrainer``).
+"""
+
+from repro.ps.async_mode import (AsyncPSTrainer, AsyncPushEvent,
+                                 AsyncRunLog)
+from repro.ps.server import (PSServer, PushResult, StaleVersion,
+                             TransferLedger)
+from repro.ps.topology import LinkModel, PSTopology, asymmetric_link
+from repro.ps.worker import PSTrainer
+
+__all__ = [
+    "LinkModel", "PSTopology", "asymmetric_link",
+    "PSServer", "PushResult", "StaleVersion", "TransferLedger",
+    "PSTrainer",
+    "AsyncPSTrainer", "AsyncPushEvent", "AsyncRunLog",
+]

@@ -1,0 +1,234 @@
+"""Bounded-staleness asynchronous PS execution.
+
+Synchronous mode (``repro.ps.worker.PSTrainer``) pays the straggler at
+every barrier; this module removes the barrier: each worker pulls a
+parameter snapshot, computes gradients *against that version*, and pushes
+— the server accepts the push only if the worker is at most ``k``
+versions behind the head (Stale Synchronous Parallel, k=0 degenerating to
+fully-serialized sequential SGD).  A rejected worker re-pulls the head
+version and recomputes, which is exactly the liveness rule that bounds
+every *applied* gradient's staleness by ``k``.
+
+Execution is a deterministic discrete-event simulation driven by the
+topology's per-worker costs: each worker's pull → compute → push latency
+comes from its own ``LayerCosts`` under the shared ``BucketPlan`` (via
+``core.simulator``), the event queue orders commits by simulated time
+(ties by worker id), and gradient math runs for real through one jitted
+``value_and_grad`` shared by all workers — so runs are reproducible
+bit-for-bit and the staleness trace is machine-checkable, while losses
+come from actually training the model (the smoke-CNN convergence test).
+
+The trainer is generic over "a model whose parameters are a list of
+per-layer pytrees + a loss function": the smoke CNN
+(``repro.models.cnn``) and the text archs (``sched_layer_trees`` +
+``train_loss``) both fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.buckets import BucketPlan, decision_from_plan
+from repro.core.costmodel import TopologyCosts, iteration_time
+from repro.dist.collectives import (FlatSpec, flatten_tree, make_flat_spec,
+                                    unflatten_tree)
+from repro.optim import Optimizer
+from repro.ps.server import PSServer, PushResult, StaleVersion
+from repro.ps.topology import PSTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncPushEvent:
+    """One committed (accepted or rejected) push, in commit order."""
+
+    worker: int
+    sim_time: float           # simulated seconds at commit
+    version: int              # version the gradients were computed at
+    result: PushResult
+    loss: float
+    retries: int              # stale rejections before this commit
+
+
+@dataclasses.dataclass
+class AsyncRunLog:
+    events: List[AsyncPushEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def accepted(self) -> List[AsyncPushEvent]:
+        return [e for e in self.events if e.result.accepted]
+
+    @property
+    def losses(self) -> List[float]:
+        return [e.loss for e in self.accepted]
+
+    @property
+    def max_staleness(self) -> int:
+        return max((e.result.staleness for e in self.accepted), default=0)
+
+    @property
+    def num_rejected(self) -> int:
+        return sum(1 for e in self.events if not e.result.accepted)
+
+    @property
+    def makespan(self) -> float:
+        return max((e.sim_time for e in self.events), default=0.0)
+
+
+class AsyncPSTrainer:
+    """Event-driven bounded-staleness trainer over a PS topology.
+
+    Parameters
+    ----------
+    init_layers:
+        per-layer parameter pytrees (the model's sched-layer view).
+    loss_fn:
+        ``loss_fn(layers, batch) -> scalar`` over the *assembled* layer
+        list; differentiated once with ``jax.value_and_grad`` and shared
+        by every worker.
+    plan:
+        the shared ``BucketPlan`` — each forward bucket is one pull
+        message, each backward bucket one push message.
+    staleness:
+        the bound ``k``: a push computed at version ``v`` commits only if
+        ``head − v ≤ k``.
+    costs:
+        optional per-worker ``TopologyCosts`` driving the simulated
+        clock; without it every worker's iteration costs one unit, which
+        keeps the event order deterministic but uninformative.
+    """
+
+    def __init__(self, *, init_layers: Sequence[Any],
+                 loss_fn: Callable[[List[Any], Dict[str, Any]], Any],
+                 optimizer: Optimizer, topology: PSTopology,
+                 plan: BucketPlan, staleness: int = 1,
+                 costs: Optional[TopologyCosts] = None):
+        init_layers = list(init_layers)
+        if not init_layers:
+            raise ValueError("need at least one layer tree")
+        self.topology = topology
+        self.plan = plan
+        self.staleness = staleness
+        self.specs: Tuple[FlatSpec, ...] = tuple(
+            make_flat_spec(t, 1) for t in init_layers)
+        L = len(self.specs)
+        for direction in ("forward", "backward"):
+            covered = sorted(l for b in getattr(plan, direction) for l in b)
+            if covered != list(range(L)):
+                raise ValueError(f"plan's {direction} buckets cover layers "
+                                 f"{covered}, model has 0..{L - 1}")
+        flats = [flatten_tree(t, s) for t, s in zip(init_layers, self.specs)]
+        self.server = PSServer(self.specs, topology, optimizer, flats,
+                               staleness_bound=staleness)
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        if costs is not None and costs.num_workers != topology.num_workers:
+            raise ValueError(f"costs for {costs.num_workers} workers, "
+                             f"topology has {topology.num_workers}")
+        self._costs = costs
+        self._durations = self._iteration_durations()
+
+    def _iteration_durations(self) -> Tuple[float, ...]:
+        if self._costs is None:
+            # compute-bound default: duration ∝ 1 / worker compute rate,
+            # normalized so the fastest worker's iteration is one unit
+            flops = self.topology.worker_flops
+            fastest = max(flops)
+            return tuple(fastest / f for f in flops)
+        decision = decision_from_plan(self.plan)
+        return tuple(iteration_time(c, *decision)
+                     for c in self._costs.workers)
+
+    # ------------------------------------------------------------------
+    # one worker attempt: segmented pull → grads → segmented push
+    # ------------------------------------------------------------------
+
+    def _pull_layers(self, worker: int) -> Tuple[int, List[Any]]:
+        """Pull every forward segment at one pinned version."""
+        while True:
+            version: Optional[int] = None
+            buffers: Dict[int, Any] = {}
+            try:
+                for bucket in self.plan.forward:
+                    v, flats = self.server.pull_bucket(
+                        bucket, version=version, worker=worker)
+                    version = v
+                    buffers.update(flats)
+            except StaleVersion:
+                continue          # snapshot evicted mid-pull: restart at head
+            layers = [unflatten_tree(buffers[l], self.specs[l])
+                      for l in range(len(self.specs))]
+            return version, layers
+
+    def _compute(self, worker: int, batch) -> Tuple[float, int, List[Any]]:
+        """Pull (pinning a version) and compute gradients against it."""
+        version, layers = self._pull_layers(worker)
+        loss, grads = self._grad_fn(layers, batch)
+        return float(loss), version, grads
+
+    def _push(self, worker: int, version: int,
+              grads: List[Any]) -> PushResult:
+        """Push every backward segment; the last one commits."""
+        result: Optional[PushResult] = None
+        for bucket in self.plan.backward:
+            flat_grads = {l: flatten_tree(grads[l], self.specs[l])
+                          for l in bucket}
+            result = self.server.push_bucket(worker, version, bucket,
+                                             flat_grads)
+        assert result is not None, "plan.backward committed no push"
+        return result
+
+    # ------------------------------------------------------------------
+    # the event loop
+    # ------------------------------------------------------------------
+
+    def run(self, num_pushes: int,
+            batch_fn: Callable[[int, int], Any]) -> AsyncRunLog:
+        """Run until ``num_pushes`` gradient pushes were *accepted*.
+
+        Each worker pulls + computes at the *start* of its iteration and
+        commits its push one per-worker iteration duration later — other
+        workers' commits land in between, which is where staleness comes
+        from.  ``batch_fn(worker, attempt_idx) -> batch`` supplies data;
+        the attempt index increments per computation (including retries
+        after a stale rejection), so every retry sees fresh data."""
+        if num_pushes < 1:
+            raise ValueError(f"num_pushes must be >= 1, got {num_pushes}")
+        log = AsyncRunLog()
+        W = self.topology.num_workers
+        attempts = [0] * W
+        retries = [0] * W
+        num_accepted = 0
+        # (commit time, worker id, compute version, loss, grads); one
+        # in-flight iteration per worker makes (time, id) unique, so the
+        # payload is never compared.
+        queue: List[Tuple[float, int, int, float, List[Any]]] = []
+        for w in range(W):
+            loss, version, grads = self._compute(w, batch_fn(w, 0))
+            attempts[w] = 1
+            heapq.heappush(queue, (self._durations[w], w, version, loss,
+                                   grads))
+        while num_accepted < num_pushes:
+            t, w, version, loss, grads = heapq.heappop(queue)
+            result = self._push(w, version, grads)
+            log.events.append(AsyncPushEvent(
+                worker=w, sim_time=t, version=version, result=result,
+                loss=loss, retries=retries[w]))
+            num_accepted += int(result.accepted)
+            retries[w] = retries[w] + 1 if not result.accepted else 0
+            loss, version, grads = self._compute(w, batch_fn(w, attempts[w]))
+            attempts[w] += 1
+            heapq.heappush(queue, (t + self._durations[w], w, version, loss,
+                                   grads))
+        return log
+
+    # ------------------------------------------------------------------
+    # interop
+    # ------------------------------------------------------------------
+
+    def layer_params(self) -> List[Any]:
+        """Head-version parameters, unflattened to the layer pytrees."""
+        return [unflatten_tree(f, s)
+                for f, s in zip(self.server.flats(), self.specs)]

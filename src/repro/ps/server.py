@@ -1,0 +1,205 @@
+"""Server-side parameter state: versioned partitions, segmented push/pull.
+
+``PSServer`` is the authoritative copy of the model in the PS execution
+subsystem.  Parameters live as one padded flat float32 buffer per sched
+layer (the same ``FlatSpec`` layout the dist layer uses, so worker-side
+code can reuse ``flatten_tree``/``unflatten_tree`` unchanged), grouped by
+owning server shard per :class:`repro.ps.topology.PSTopology`.
+
+Protocol (one message per DynaComm transmission segment):
+
+* **pull** — ``pull_bucket(bucket, version=v)`` serves the segment's layer
+  buffers from the *versioned snapshot* ``v``, so a worker whose
+  segmented pull is interleaved with other workers' pushes still
+  assembles a consistent parameter set (all segments from one version);
+* **push** — ``push_bucket(worker, version, bucket, grads)`` accumulates
+  the segment's gradients; when the last segment of the plan arrives the
+  push *commits*: the bounded-staleness rule (``server.version − v ≤ k``)
+  accepts or rejects it atomically, an accepted commit runs the server
+  optimizer and bumps the version.
+
+The server keeps the last ``staleness_bound + 1`` snapshots; pulling an
+evicted version raises :class:`StaleVersion` — the worker must re-pull at
+the head version (exactly what a real PS returns ``ERR_STALE`` for).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.collectives import FLAT_DTYPE, FlatSpec, bucket_bytes
+from repro.optim import Optimizer
+from repro.ps.topology import PSTopology
+
+
+class StaleVersion(RuntimeError):
+    """Requested snapshot version has been evicted (staleness window)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PushResult:
+    """Outcome of a committed (fully pushed) gradient set."""
+
+    worker: int
+    accepted: bool
+    staleness: int            # server.version − compute version, at commit
+    version: int              # server version after the commit
+
+
+@dataclasses.dataclass
+class TransferLedger:
+    """Per-worker byte/message accounting, split by direction."""
+
+    pulled_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    pushed_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    num_pulls: int = 0
+    num_pushes: int = 0
+    rejected_pushes: int = 0
+
+    def record_pull(self, worker: int, nbytes: int) -> None:
+        self.pulled_bytes[worker] = self.pulled_bytes.get(worker, 0) + nbytes
+        self.num_pulls += 1
+
+    def record_push(self, worker: int, nbytes: int) -> None:
+        self.pushed_bytes[worker] = self.pushed_bytes.get(worker, 0) + nbytes
+        self.num_pushes += 1
+
+
+class PSServer:
+    """Sharded, versioned parameter store with a bounded-staleness gate."""
+
+    def __init__(self, specs: Sequence[FlatSpec], topology: PSTopology,
+                 optimizer: Optimizer, init_flats: Sequence[jnp.ndarray], *,
+                 staleness_bound: int = 0):
+        if staleness_bound < 0:
+            raise ValueError(f"staleness_bound must be >= 0, got "
+                             f"{staleness_bound}")
+        if len(init_flats) != len(specs):
+            raise ValueError(f"{len(init_flats)} buffers for "
+                             f"{len(specs)} specs")
+        for l, (flat, spec) in enumerate(zip(init_flats, specs)):
+            if flat.shape != (spec.padded,):
+                raise ValueError(f"layer {l} buffer shape {flat.shape} != "
+                                 f"({spec.padded},)")
+        self.specs = tuple(specs)
+        self.topology = topology
+        self.optimizer = optimizer
+        self.staleness_bound = staleness_bound
+        self._flats: List[jnp.ndarray] = [jnp.asarray(f, FLAT_DTYPE)
+                                          for f in init_flats]
+        self._opt_state = optimizer.init(self._flats)
+        self.version = 0
+        self._snapshots: Dict[int, Tuple[jnp.ndarray, ...]] = {
+            0: tuple(self._flats)}
+        # pending segmented pushes: (worker, version) → {layer: grad flat}
+        self._pending: Dict[Tuple[int, int], Dict[int, jnp.ndarray]] = {}
+        self.ledger = TransferLedger()
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.specs)
+
+    # ------------------------------------------------------------------
+    # pull: parameters down, one message per segment
+    # ------------------------------------------------------------------
+
+    def segment_bytes(self, bucket: Sequence[int]) -> int:
+        """Payload of one segment message (unpadded f32 bytes)."""
+        return bucket_bytes(self.specs, bucket)
+
+    def pull_bucket(self, bucket: Sequence[int], *,
+                    version: Optional[int] = None,
+                    worker: Optional[int] = None
+                    ) -> Tuple[int, Dict[int, jnp.ndarray]]:
+        """Serve one segment from snapshot ``version`` (default: head).
+
+        Returns ``(version, {layer: flat buffer})``.  Workers pin the
+        version of their first segment and pass it for the rest of the
+        plan, getting a consistent parameter set under concurrent pushes.
+        """
+        if not bucket:
+            raise ValueError("cannot pull an empty segment")
+        v = self.version if version is None else version
+        if v not in self._snapshots:
+            raise StaleVersion(
+                f"version {v} evicted (head {self.version}, window "
+                f"{self.staleness_bound}); re-pull at the head version")
+        snap = self._snapshots[v]
+        out = {l: snap[l] for l in bucket}
+        if worker is not None:
+            self.ledger.record_pull(worker, self.segment_bytes(bucket))
+        return v, out
+
+    # ------------------------------------------------------------------
+    # push: gradients up, one message per segment, commit on the last
+    # ------------------------------------------------------------------
+
+    def push_bucket(self, worker: int, version: int, bucket: Sequence[int],
+                    grads: Dict[int, jnp.ndarray]
+                    ) -> Optional[PushResult]:
+        """Accumulate one segment's gradients; commit when complete.
+
+        Returns ``None`` while segments are outstanding, a
+        :class:`PushResult` once all ``num_layers`` gradients arrived —
+        rejected pushes (staleness beyond the bound at commit time)
+        discard the pending set without touching the parameters.
+        """
+        missing = [l for l in bucket if l not in grads]
+        if missing:
+            raise ValueError(f"push of bucket {tuple(bucket)} lacks grads "
+                             f"for layers {missing}")
+        key = (worker, version)
+        pending = self._pending.setdefault(key, {})
+        for l in bucket:
+            if l in pending:
+                raise ValueError(f"layer {l} pushed twice by worker "
+                                 f"{worker} at version {version}")
+            pending[l] = jnp.asarray(grads[l], FLAT_DTYPE)
+        self.ledger.record_push(worker, self.segment_bytes(bucket))
+        if len(pending) < self.num_layers:
+            return None
+        del self._pending[key]
+        staleness = self.version - version
+        if staleness > self.staleness_bound:
+            self.ledger.rejected_pushes += 1
+            return PushResult(worker=worker, accepted=False,
+                              staleness=staleness, version=self.version)
+        grad_list = [pending[l] for l in range(self.num_layers)]
+        self._flats, self._opt_state = self.optimizer.update(
+            grad_list, self._opt_state, self._flats)
+        self.version += 1
+        self._snapshots[self.version] = tuple(self._flats)
+        self._evict()
+        return PushResult(worker=worker, accepted=True, staleness=staleness,
+                          version=self.version)
+
+    def _evict(self) -> None:
+        floor = self.version - self.staleness_bound
+        for v in [v for v in self._snapshots if v < floor]:
+            del self._snapshots[v]
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def snapshot_versions(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._snapshots))
+
+    def flats(self) -> List[jnp.ndarray]:
+        """The head-version parameter buffers."""
+        return list(self._flats)
+
+    def shard_view(self) -> Dict[int, Tuple[int, ...]]:
+        """{shard: owned layer ids} under the topology's partition."""
+        return {s: self.topology.layers_of_shard(s, self.num_layers)
+                for s in range(self.topology.num_servers)}
+
+    def shard_bytes(self) -> Dict[int, int]:
+        """Unpadded parameter bytes resident per server shard."""
+        return {s: sum(self.specs[l].total * 4 for l in layers)
+                for s, layers in self.shard_view().items()}

@@ -1,0 +1,170 @@
+"""Parameter-server topology: S server shards × W edge workers.
+
+The paper's deployment (Section II): parameter servers hold the model,
+edge devices pull parameters down and push gradients up.  ``PSTopology``
+describes that fabric explicitly —
+
+* ``num_servers`` server shards, each owning a contiguous block of sched
+  layers (``shard_of_layer``); a DynaComm transmission segment is one
+  message against the shard owning its first layer (``owner_of_bucket``);
+* one :class:`LinkModel` per worker: an *asymmetric* pair of
+  ``core.netmodel`` network models — ``down`` times the parameter pull
+  (server → worker), ``up`` times the gradient push (worker → server).
+  Edge uplinks are routinely 5-20× slower than downlinks, which is what
+  makes per-direction Δt/bandwidth worth modelling;
+* per-worker compute rates (``worker_flops``) — heterogeneous edge
+  hardware.
+
+``worker_costs`` / ``topology_costs`` project the topology onto the
+scheduler's cost interface: per-worker ``LayerCosts`` whose pt/Δt come
+from the downlink, gt/Δt_bwd from the uplink, and fc/bc from that
+worker's own compute rate — so DynaComm plans *per topology* rather than
+per homogeneous cluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import LayerCosts, TopologyCosts
+from repro.core.netmodel import EdgeNetworkModel
+from repro.core.profiler import LayerProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """One worker's asymmetric path to the parameter servers.
+
+    ``down`` and ``up`` are network models exposing ``dt`` and
+    ``transfer_time(nbytes)`` (any ``core.netmodel`` model qualifies).
+    """
+
+    down: Any                  # server → worker: parameter pulls
+    up: Any                    # worker → server: gradient pushes
+
+    def __post_init__(self):
+        for name in ("down", "up"):
+            m = getattr(self, name)
+            if not hasattr(m, "dt") or not hasattr(m, "transfer_time"):
+                raise TypeError(f"{name} model {m!r} lacks the network "
+                                f"interface (dt + transfer_time)")
+
+
+def asymmetric_link(down_bps: float, up_bps: float, *,
+                    rtt_s: float = EdgeNetworkModel.rtt_s,
+                    setup_s: float = EdgeNetworkModel.setup_s) -> LinkModel:
+    """The common edge case: one RTT, different bandwidth per direction."""
+    return LinkModel(
+        down=EdgeNetworkModel(bandwidth_bps=down_bps, rtt_s=rtt_s,
+                              setup_s=setup_s),
+        up=EdgeNetworkModel(bandwidth_bps=up_bps, rtt_s=rtt_s,
+                            setup_s=setup_s))
+
+
+@dataclasses.dataclass(frozen=True)
+class PSTopology:
+    """S server shards × W edge workers with per-link, per-worker costs."""
+
+    num_servers: int
+    links: Tuple[LinkModel, ...]          # one per worker
+    worker_flops: Tuple[float, ...]       # compute rate per worker (FLOP/s)
+
+    def __post_init__(self):
+        object.__setattr__(self, "links", tuple(self.links))
+        object.__setattr__(self, "worker_flops",
+                           tuple(float(f) for f in self.worker_flops))
+        if self.num_servers < 1:
+            raise ValueError(f"num_servers must be >= 1, got "
+                             f"{self.num_servers}")
+        if not self.links:
+            raise ValueError("a topology needs at least one worker link")
+        if len(self.worker_flops) != len(self.links):
+            raise ValueError(f"{len(self.worker_flops)} worker_flops for "
+                             f"{len(self.links)} links")
+        if any(f <= 0 for f in self.worker_flops):
+            raise ValueError("worker_flops must be positive")
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.links)
+
+    @classmethod
+    def uniform(cls, num_servers: int, num_workers: int, *,
+                down_bps: float = 10e9, up_bps: float = 1e9,
+                flops: float = 1e10,
+                rtt_s: float = EdgeNetworkModel.rtt_s,
+                setup_s: float = EdgeNetworkModel.setup_s) -> "PSTopology":
+        """Homogeneous workers behind identical asymmetric links."""
+        link = asymmetric_link(down_bps, up_bps, rtt_s=rtt_s,
+                               setup_s=setup_s)
+        return cls(num_servers=num_servers, links=(link,) * num_workers,
+                   worker_flops=(flops,) * num_workers)
+
+    # ------------------------------------------------------------------
+    # server sharding
+    # ------------------------------------------------------------------
+
+    def shard_of_layer(self, layer: int, num_layers: int) -> int:
+        """Owning server shard of 0-indexed sched layer ``layer``.
+
+        Layers are split into ``num_servers`` contiguous blocks (block s
+        holds layers [s*L/S, (s+1)*L/S)), so DynaComm's contiguous
+        transmission segments mostly stay within one shard."""
+        if not 0 <= layer < num_layers:
+            raise ValueError(f"layer {layer} outside 0..{num_layers - 1}")
+        return min(layer * self.num_servers // num_layers,
+                   self.num_servers - 1)
+
+    def owner_of_bucket(self, bucket: Sequence[int], num_layers: int) -> int:
+        """The shard a segment's single pull/push message is routed to:
+        the owner of the segment's lowest layer."""
+        if not bucket:
+            raise ValueError("empty bucket has no owner")
+        return self.shard_of_layer(min(bucket), num_layers)
+
+    def layers_of_shard(self, shard: int, num_layers: int) -> Tuple[int, ...]:
+        if not 0 <= shard < self.num_servers:
+            raise ValueError(f"shard {shard} outside 0..{self.num_servers - 1}")
+        return tuple(l for l in range(num_layers)
+                     if self.shard_of_layer(l, num_layers) == shard)
+
+    # ------------------------------------------------------------------
+    # projection onto the scheduler's cost interface
+    # ------------------------------------------------------------------
+
+    def worker_costs(self, worker: int, *, param_bytes: Sequence[float],
+                     flops_fwd: Sequence[float],
+                     flops_bwd: Sequence[float] | None = None,
+                     grad_bytes: Sequence[float] | None = None) -> LayerCosts:
+        """This worker's per-layer cost vectors.
+
+        pt/Δt from its downlink, gt/Δt_bwd from its uplink, fc/bc from its
+        own compute rate (bc defaults to 2× fc FLOPs)."""
+        if not 0 <= worker < self.num_workers:
+            raise ValueError(f"worker {worker} outside "
+                             f"0..{self.num_workers - 1}")
+        link = self.links[worker]
+        pb = np.asarray(param_bytes, dtype=np.float64)
+        gb = pb if grad_bytes is None else np.asarray(grad_bytes, np.float64)
+        ff = np.asarray(flops_fwd, dtype=np.float64)
+        fb = 2.0 * ff if flops_bwd is None else np.asarray(flops_bwd,
+                                                           np.float64)
+        rate = self.worker_flops[worker]
+        return LayerCosts(pt=link.down.transfer_time(pb), fc=ff / rate,
+                          bc=fb / rate, gt=link.up.transfer_time(gb),
+                          dt=link.down.dt, dt_bwd=link.up.dt)
+
+    def topology_costs(self, profiles: Sequence[LayerProfile]
+                       ) -> TopologyCosts:
+        """Per-worker ``LayerCosts`` from one set of layer workloads."""
+        pb = [p.param_bytes for p in profiles]
+        gb = [p.gbytes for p in profiles]
+        ff = [p.flops_fwd for p in profiles]
+        fb = [p.bwd for p in profiles]
+        return TopologyCosts(workers=tuple(
+            self.worker_costs(w, param_bytes=pb, flops_fwd=ff, flops_bwd=fb,
+                              grad_bytes=gb)
+            for w in range(self.num_workers)))

@@ -61,6 +61,62 @@ class TestNetworkSchedule:
             bandwidth_shift(10e9, 1e9, at_epoch=0)
 
 
+class TestNetworkScheduleEdgeCases:
+    """Epochs exactly on shift boundaries, degenerate knot lists,
+    non-monotone epochs (ISSUE 3 satellite)."""
+
+    def _models(self, n):
+        return [EdgeNetworkModel(bandwidth_bps=(i + 1) * 1e9)
+                for i in range(n)]
+
+    def test_epoch_exactly_on_every_boundary(self):
+        """model_at at a knot's start epoch returns the *new* model — the
+        shift applies to the boundary epoch itself, for every knot."""
+        m = self._models(3)
+        sched = NetworkSchedule(knots=((0, m[0]), (2, m[1]), (5, m[2])))
+        assert sched.model_at(0) is m[0]
+        assert sched.model_at(1) is m[0]
+        assert sched.model_at(2) is m[1]          # exactly on the boundary
+        assert sched.model_at(4) is m[1]
+        assert sched.model_at(5) is m[2]          # exactly on the boundary
+        assert sched.model_at(10 ** 9) is m[2]    # far past the last knot
+
+    def test_empty_schedule_rejected(self):
+        with pytest.raises(ValueError, match="at least one knot"):
+            NetworkSchedule(knots=())
+
+    def test_non_monotone_epochs_rejected(self):
+        m = self._models(3)
+        with pytest.raises(ValueError, match="strictly increasing"):
+            NetworkSchedule(knots=((0, m[0]), (3, m[1]), (2, m[2])))
+        with pytest.raises(ValueError, match="strictly increasing"):
+            NetworkSchedule(knots=((0, m[0]), (2, m[1]), (2, m[2])))
+
+    def test_first_knot_must_anchor_epoch_zero(self):
+        (m,) = self._models(1)
+        with pytest.raises(ValueError, match="epoch 0"):
+            NetworkSchedule(knots=((3, m),))
+
+    def test_single_knot_covers_all_epochs(self):
+        (m,) = self._models(1)
+        sched = NetworkSchedule(knots=((0, m),))
+        assert sched.num_knots == 1
+        for e in (0, 1, 7, 12345):
+            assert sched.model_at(e) is m
+
+    def test_negative_epoch_rejected(self):
+        (m,) = self._models(1)
+        with pytest.raises(ValueError, match=">= 0"):
+            NetworkSchedule(knots=((0, m),)).model_at(-3)
+
+    def test_float_like_epochs_coerced(self):
+        """Knot epochs are coerced to int on construction."""
+        m = self._models(2)
+        sched = NetworkSchedule(knots=((0.0, m[0]), (2.0, m[1])))
+        assert sched.knots[1][0] == 2
+        assert sched.model_at(2) is m[1]
+
+
 class TestLayerTimingHook:
     def test_medians_drop_warmup(self):
         hook = LayerTimingHook(warmup=1)
@@ -146,6 +202,159 @@ class TestDynamicTrainerSingleDevice:
             "  %c = (f32[8]{0}, f32[32]{0}) all-gather-start(f32[8]{0} %z), "
             "dimensions={0}\n")
         assert hlo_collective_counts(hlo) == (2, 1)
+
+
+class TestEwmaDriftDetector:
+    def test_validation(self):
+        from repro.core import EwmaDriftDetector
+        for kw in ({"alpha": 0.0}, {"alpha": 1.5}, {"threshold": 0.0},
+                   {"patience": 0}, {"warmup": -1}):
+            with pytest.raises(ValueError):
+                EwmaDriftDetector(**kw)
+        with pytest.raises(ValueError):
+            EwmaDriftDetector().update(-1.0)
+
+    def test_persistent_shift_triggers_once(self):
+        from repro.core import EwmaDriftDetector
+        det = EwmaDriftDetector(warmup=2, patience=2, threshold=0.3)
+        out = [det.update(t) for t in [1.0] * 5 + [2.0] * 6]
+        assert sum(out) == 1                      # one trigger per shift
+        assert out[6]                             # fires on the 2nd drifted
+        assert det.num_triggers == 1
+        # after re-seeding at 2.0, a shift back down re-triggers
+        out2 = [det.update(t) for t in [1.0] * 3]
+        assert sum(out2) == 1
+
+    def test_blip_absorbed_by_patience(self):
+        from repro.core import EwmaDriftDetector
+        det = EwmaDriftDetector(warmup=1, patience=3, threshold=0.3)
+        out = [det.update(t) for t in [1.0, 1.0, 1.0, 5.0, 1.0, 1.0, 5.0,
+                                       5.0, 1.0, 1.0]]
+        assert not any(out)                       # isolated spikes never fire
+        assert det.baseline == pytest.approx(1.0, rel=0.05)
+
+    def test_warmup_never_triggers(self):
+        from repro.core import EwmaDriftDetector
+        det = EwmaDriftDetector(warmup=5, patience=1, threshold=0.1)
+        assert not any(det.update(t) for t in [1.0, 9.0, 1.0, 9.0, 1.0])
+
+    def test_reset(self):
+        from repro.core import EwmaDriftDetector
+        det = EwmaDriftDetector(warmup=0, patience=1, threshold=0.1)
+        det.update(1.0)
+        det.reset()
+        assert det.baseline is None and det.num_triggers == 0
+
+    def test_state_dict_roundtrip(self):
+        """A restored detector continues from the saved baseline instead of
+        re-entering warmup (the dynamic loop checkpoints this)."""
+        from repro.core import EwmaDriftDetector
+        a = EwmaDriftDetector(warmup=2, patience=2, threshold=0.3)
+        for t in [1.0, 1.0, 1.0, 2.0]:       # mid-streak: one drifted sample
+            a.update(t)
+        b = EwmaDriftDetector(warmup=2, patience=2, threshold=0.3)
+        b.load_state_dict(a.state_dict())
+        assert b.baseline == a.baseline
+        assert b.update(2.0)                 # 2nd drifted sample: fires now
+        assert not a.state_dict() == b.state_dict()  # b re-seeded at 2.0
+
+
+class TestCheckpointTextLeaves:
+    def test_string_leaf_roundtrip(self, tmp_path):
+        """repro.checkpoint carries variable-width text leaves (the
+        dynamic loop stores JSON metadata this way)."""
+        from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+        tree = {"meta": np.asarray('{"plan": [1, 2, 3]}'),
+                "x": np.arange(4, dtype=np.float32)}
+        path = str(tmp_path / "ck.npz")
+        save_checkpoint(path, tree, step=7)
+        template = {"meta": np.asarray(""), "x": np.zeros(4, np.float32)}
+        restored, step = load_checkpoint(path, template)
+        assert step == 7
+        assert str(restored["meta"]) == '{"plan": [1, 2, 3]}'
+        np.testing.assert_array_equal(restored["x"], tree["x"])
+
+    def test_numeric_shape_still_checked(self, tmp_path):
+        from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+        path = str(tmp_path / "ck.npz")
+        save_checkpoint(path, {"x": np.zeros(4)})
+        with pytest.raises(ValueError, match="shape mismatch"):
+            load_checkpoint(path, {"x": np.zeros(5)})
+
+
+class TestDynamicLoopStateSingleDevice:
+    """Checkpoint/restore of the dynamic loop + drift-detector wiring,
+    on a 1-device mesh (collectives over a size-1 axis are valid)."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.data.pipeline import SyntheticText
+        from repro.optim import adamw
+
+        cfg = get_config("granite-3-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        pipe = SyntheticText(cfg.vocab_size, 32, 4, seed=0)
+        kw = dict(cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
+                  network=bandwidth_shift(10e9, 1e9, at_epoch=2),
+                  steps_per_epoch=2, compute_flops_per_s=1e10)
+        return kw, pipe
+
+    def test_resume_is_bit_identical(self, setup, tmp_path):
+        import jax
+        from repro.dist.dynamic import DynamicTrainer
+        kw, pipe = setup
+
+        ref = DynamicTrainer(**kw)
+        state = ref.init_state(jax.random.PRNGKey(0))
+        state, ref_losses = ref.run(state, pipe.batch, 6)
+
+        a = DynamicTrainer(**kw)
+        sa = a.init_state(jax.random.PRNGKey(0))
+        losses = []
+        for i in range(3):                        # stop mid-epoch
+            sa, l = a.step(sa, pipe.batch(i))
+            losses.append(float(l))
+        path = str(tmp_path / "loop.npz")
+        a.save_loop_state(path)
+
+        b = DynamicTrainer(**kw)                  # fresh trainer, no memory
+        b.restore_loop_state(path)
+        assert b.step_index == 3
+        assert b.plan == a.plan
+        assert [e.step for e in b.events] == [e.step for e in a.events]
+        for i in range(3, 6):
+            sa, l = b.step(sa, pipe.batch(i))
+            losses.append(float(l))
+        assert losses == ref_losses
+        # resume replays the same re-schedule history as the straight run
+        assert [(e.step, e.epoch, e.plan) for e in b.events] == \
+            [(e.step, e.epoch, e.plan) for e in ref.events]
+        # the mid-epoch recompile is not recorded as a scheduling event
+        assert len(b.events) == len(ref.events)
+
+    def test_drift_detector_forces_reschedule(self, setup):
+        import jax
+        from repro.dist.dynamic import DynamicTrainer
+        kw, pipe = setup
+
+        class FireOnce:
+            calls = 0
+
+            def update(self, seconds):
+                self.calls += 1
+                return self.calls == 2            # fires after step 2
+
+        dyn = DynamicTrainer(drift_detector=FireOnce(),
+                             **{**kw, "steps_per_epoch": 100})
+        state = dyn.init_state(jax.random.PRNGKey(0))
+        for i in range(4):
+            state, _ = dyn.step(state, pipe.batch(i))
+        triggers = [(e.step, e.trigger) for e in dyn.events]
+        assert triggers[0] == (0, "epoch")
+        assert (2, "drift") in triggers           # detector-forced re-plan
+        assert dyn.scheduler._iter_seen == 4      # epoch alignment intact
 
 
 @pytest.mark.slow
