@@ -1,6 +1,6 @@
 """Parameter-server benchmark scenarios (beyond-paper).
 
-Two benches:
+Three benches:
 
 * ``ps_topology`` — DynaComm vs competing strategies in the PS regime:
   the paper's CNN cost tables mapped onto a heterogeneous S×W topology
@@ -11,7 +11,15 @@ Two benches:
 * ``ps_staleness`` — the sync-vs-async trade: simulated time to apply N
   gradient pushes on the smoke CNN as the staleness bound k grows
   (k=0 serializes; larger k reclaims barrier-wait time at the price of
-  stale-gradient rejections).
+  stale-gradient rejections), under both throttle disciplines — the
+  ``wait`` rows show SSP wait-at-barrier keeping every worker
+  contributing at small k where ``reject`` starves the slow one.
+* ``dynamic_ps_drift`` — the run-time loop's payoff in the PS regime:
+  per-epoch uplink degradation over the paper's CNN cost tables,
+  comparing each epoch's re-planned consensus makespan against freezing
+  the epoch-0 plan (the stale-plan penalty ``DynamicPSTrainer`` exists
+  to reclaim), plus the Table I scheduling-overhead-hidden check.
+  CI publishes this bench as ``BENCH_dynamic_ps.json``.
 """
 
 from __future__ import annotations
@@ -20,8 +28,10 @@ from typing import Dict, List
 
 from benchmarks.edge_setup import cnn_costs
 from repro.core import (consensus_decision, iteration_time,
-                        schedule_topology, simulate_ps_iteration)
+                        schedule_topology, simulate_ps_iteration,
+                        simulate_ps_replan)
 from repro.core.costmodel import TopologyCosts, LayerCosts
+from repro.core.scheduler import TopologyScheduler
 
 MODELS = ("vgg19", "googlenet", "inception-v4", "resnet152")
 STRATS = ("sequential", "lbl", "ibatch", "dynacomm")
@@ -106,23 +116,73 @@ def ps_staleness() -> List[Dict]:
 
     rows = []
     pushes = 24
-    for k in (0, 1, 2, 4):
-        tr = AsyncPSTrainer(init_layers=params["layers"], loss_fn=loss_fn,
-                            optimizer=sgd(0.02), topology=topo,
-                            plan=plan, staleness=k)
-        log = tr.run(pushes, batch_fn)
-        rows.append({
-            "staleness_k": k, "accepted": len(log.accepted),
-            "rejected": log.num_rejected,
-            "max_staleness": log.max_staleness,
-            "sim_makespan_s": round(log.makespan, 4),
-            "sim_s_per_push": round(log.makespan / pushes, 4),
-            "final_loss": round(log.losses[-1], 4),
-        })
+    for throttle in ("reject", "wait"):
+        for k in (0, 1, 2, 4):
+            tr = AsyncPSTrainer(init_layers=params["layers"],
+                                loss_fn=loss_fn, optimizer=sgd(0.02),
+                                topology=topo, plan=plan, staleness=k,
+                                throttle=throttle)
+            log = tr.run(pushes, batch_fn)
+            slow_accepted = log.accepted_by_worker().get(2, 0)
+            rows.append({
+                "throttle": throttle,
+                "staleness_k": k, "accepted": len(log.accepted),
+                "rejected": log.num_rejected,
+                "slow_worker_accepted": slow_accepted,
+                "max_staleness": log.max_staleness,
+                "barrier_wait_s": round(log.total_wait_s, 4),
+                "sim_makespan_s": round(log.makespan, 4),
+                "sim_s_per_push": round(log.makespan / pushes, 4),
+                "final_loss": round(log.losses[-1], 4),
+            })
+    return rows
+
+
+def dynamic_ps_drift() -> List[Dict]:
+    """Stale-plan penalty per epoch under uplink degradation.
+
+    Four heterogeneous workers (the ``ps_topology`` fleet); each epoch
+    multiplies every worker's gradient-push costs (uplink congestion
+    building up 1x → 8x), the consensus plan is re-derived per epoch, and
+    ``simulate_ps_replan`` compares it against freezing the epoch-0 plan.
+    """
+    drift = (1.0, 2.0, 4.0, 8.0)          # uplink slowdown per epoch
+    rows = []
+    for model in MODELS:
+        base = _hetero_topology_costs(cnn_costs(model, batch=32))
+        epoch_costs = [
+            TopologyCosts(workers=tuple(
+                LayerCosts(pt=c.pt, fc=c.fc, bc=c.bc, gt=c.gt * s,
+                           dt=c.dt, dt_bwd=c.dt_push)
+                for c in base.workers))
+            for s in drift]
+        sched = TopologyScheduler(strategy="dynacomm", reschedule_every=1)
+        decisions, hidden, sched_ms = [], [], []
+        for costs in epoch_costs:
+            # reschedule_every=1: every call re-plans against fresh costs
+            decisions.append(sched.decision_for_iteration(costs))
+            hidden.append(sched.scheduling_overhead_hidden(costs))
+            sched_ms.append(sched.last_scheduling_seconds * 1e3)
+        tl = simulate_ps_replan(epoch_costs, decisions)
+        for e, scale in enumerate(drift):
+            penalty = tl.stale_plan_penalty(e)
+            rows.append({
+                "model": model, "epoch": e, "uplink_slowdown": scale,
+                "fwd_segments": len(decisions[e][0]),
+                "bwd_segments": len(decisions[e][1]),
+                "replanned_makespan_s": round(tl.makespans[e], 4),
+                "frozen_plan_makespan_s": round(tl.frozen_makespans[e], 4),
+                "stale_plan_penalty_s": round(penalty, 4),
+                "stale_plan_penalty_pct": round(
+                    100 * penalty / tl.frozen_makespans[e], 2),
+                "sched_ms": round(sched_ms[e], 3),
+                "overhead_hidden": hidden[e],
+            })
     return rows
 
 
 PS_BENCHES = {
     "ps_topology": ps_topology,
     "ps_staleness": ps_staleness,
+    "dynamic_ps_drift": dynamic_ps_drift,
 }

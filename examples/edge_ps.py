@@ -129,7 +129,8 @@ def main():
     print(f"  accepted pushes per worker: {per_worker_counts} — no "
           f"barrier: fast workers commit at their own rate, and gradients "
           f"computed more than k versions ago are rejected (raise "
-          f"--staleness to let 4x-slower workers contribute)")
+          f"--staleness, or see examples/dynamic_ps.py for the SSP "
+          f"wait throttle that lets 4x-slower workers contribute at any k)")
     print(f"  loss {log.losses[0]:.4f} -> {log.losses[-1]:.4f} over "
           f"{len(log.losses)} versions")
 

@@ -8,8 +8,8 @@ from repro.core.baselines import (lbl_backward, lbl_forward,
                                   sequential_backward, sequential_forward)
 from repro.core.bruteforce import bruteforce_backward, bruteforce_forward
 from repro.core.scheduler import (STRATEGIES, Decision, DynaCommScheduler,
-                                  consensus_decision, evaluate, schedule,
-                                  schedule_topology)
+                                  TopologyScheduler, consensus_decision,
+                                  evaluate, schedule, schedule_topology)
 from repro.core.buckets import (BucketPlan, decision_from_plan,
                                 plan_from_decision)
 from repro.core.profiler import (EwmaDriftDetector, LayerProfile,
@@ -19,10 +19,11 @@ from repro.core.netmodel import (EdgeNetworkModel, NetworkSchedule,
                                  TPUSystemModel, TPU_HBM_BW,
                                  TPU_ICI_BW_PER_LINK, TPU_PEAK_FLOPS_BF16,
                                  as_schedule, bandwidth_shift)
-from repro.core.simulator import (IterationTimeline, PSTimeline,
-                                  check_partial_orders, simulate_backward,
-                                  simulate_forward, simulate_iteration,
-                                  simulate_ps_iteration)
+from repro.core.simulator import (IterationTimeline, PSReplanTimeline,
+                                  PSTimeline, check_partial_orders,
+                                  simulate_backward, simulate_forward,
+                                  simulate_iteration, simulate_ps_iteration,
+                                  simulate_ps_replan)
 
 __all__ = [
     "LayerCosts", "Segment", "TopologyCosts",
@@ -31,14 +32,15 @@ __all__ = [
     "ibatch_forward", "ibatch_backward", "ibatch_schedule",
     "lbl_forward", "lbl_backward", "sequential_forward", "sequential_backward",
     "bruteforce_forward", "bruteforce_backward",
-    "STRATEGIES", "Decision", "DynaCommScheduler", "evaluate", "schedule",
-    "schedule_topology", "consensus_decision",
+    "STRATEGIES", "Decision", "DynaCommScheduler", "TopologyScheduler",
+    "evaluate", "schedule", "schedule_topology", "consensus_decision",
     "BucketPlan", "plan_from_decision", "decision_from_plan",
     "EwmaDriftDetector", "LayerProfile", "LayerTimingHook",
     "costs_from_profiles", "measure_layer_costs", "random_costs",
     "EdgeNetworkModel", "NetworkSchedule", "TPUSystemModel",
     "as_schedule", "bandwidth_shift",
     "TPU_HBM_BW", "TPU_ICI_BW_PER_LINK", "TPU_PEAK_FLOPS_BF16",
-    "IterationTimeline", "PSTimeline", "simulate_forward", "simulate_backward",
-    "simulate_iteration", "simulate_ps_iteration", "check_partial_orders",
+    "IterationTimeline", "PSReplanTimeline", "PSTimeline",
+    "simulate_forward", "simulate_backward", "simulate_iteration",
+    "simulate_ps_iteration", "simulate_ps_replan", "check_partial_orders",
 ]

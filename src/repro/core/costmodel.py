@@ -73,6 +73,14 @@ class LayerCosts:
         """Δt of a gradient push (backward direction); ``dt`` if symmetric."""
         return self.dt if self.dt_bwd is None else self.dt_bwd
 
+    @property
+    def idle_window(self) -> float:
+        """The Δt + gt¹ window (paper Table I): while layer 1's gradient
+        push — always the last transmission of an iteration — is in
+        flight, the worker's compute is idle and the forward scheduler for
+        iteration i+1 can run hidden."""
+        return self.dt_push + float(self.gt[0])
+
     def scaled(self, *, compute: float = 1.0, comm: float = 1.0,
                dt: float | None = None,
                dt_bwd: float | None = None) -> "LayerCosts":
@@ -278,6 +286,21 @@ class TopologyCosts:
         """Index of the worker that gates the synchronous barrier."""
         times = self.iteration_times(fwd_segments, bwd_segments)
         return int(np.argmax(times))
+
+    @property
+    def idle_window(self) -> float:
+        """The topology-wide Δt + gt¹ idle window: the re-plan must be
+        hidden for *every* worker (the scheduler cannot know which worker
+        will straggle next epoch), so the binding window is the minimum
+        over workers."""
+        return min(c.idle_window for c in self.workers)
+
+    def scaled(self, *, compute: float = 1.0, comm: float = 1.0
+               ) -> "TopologyCosts":
+        """Every worker's costs rescaled uniformly (sensitivity sweeps:
+        ``comm`` ∝ 1/bandwidth on all links, ``compute`` ∝ batch size)."""
+        return TopologyCosts(workers=tuple(
+            c.scaled(compute=compute, comm=comm) for c in self.workers))
 
 
 # ---------------------------------------------------------------------------

@@ -133,8 +133,7 @@ class DynaCommScheduler:
         """Idle-event-trigger check (Section IV-C / Table I): the forward
         scheduler for iteration i+1 fits in the window
         (Δt + gt_i^1) while the last gradient push is in flight."""
-        window = costs.dt + float(costs.gt[0])
-        return self.last_scheduling_seconds <= window
+        return self.last_scheduling_seconds <= costs.idle_window
 
     def invalidate(self) -> None:
         """Drop the cached decision so the next iteration re-schedules
@@ -160,3 +159,69 @@ class DynaCommScheduler:
         self._decision = None
         self._iter_seen = 0
         self.last_scheduling_seconds = 0.0
+
+
+@dataclasses.dataclass
+class TopologyScheduler:
+    """Per-topology-epoch scheduler for the parameter-server regime.
+
+    The PS analogue of :class:`DynaCommScheduler`: decisions are derived
+    from a whole :class:`TopologyCosts` — one consensus decision shared by
+    every worker (``mode="consensus"``, synchronous execution) or one
+    independent decision per worker (``mode="per-worker"``, asynchronous
+    execution) — and cached until ``invalidate()`` or the next epoch
+    boundary (``reschedule_every`` iterations).
+
+    ``decision_for_iteration`` returns a ``Decision`` in consensus mode
+    and a tuple of per-worker ``Decision``s in per-worker mode.
+    """
+
+    strategy: str = "dynacomm"
+    reschedule_every: int = 195
+    mode: str = "consensus"           # "consensus" | "per-worker"
+
+    _decision: object = None
+    _iter_seen: int = 0
+    last_scheduling_seconds: float = 0.0
+    last_makespan: float = 0.0        # consensus mode: straggler seconds
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"choose from {sorted(STRATEGIES)}")
+        if self.reschedule_every < 1:
+            raise ValueError(f"reschedule_every must be >= 1, got "
+                             f"{self.reschedule_every}")
+        if self.mode not in ("consensus", "per-worker"):
+            raise ValueError(f"mode must be 'consensus' or 'per-worker', "
+                             f"got {self.mode!r}")
+
+    def decision_for_iteration(self, topo: TopologyCosts):
+        """The active decision(s), re-scheduling on the epoch boundary."""
+        if self._decision is None or \
+                self._iter_seen % self.reschedule_every == 0:
+            t0 = time.perf_counter()
+            if self.mode == "consensus":
+                self._decision, self.last_makespan = \
+                    consensus_decision(topo, self.strategy)
+            else:
+                self._decision = schedule_topology(topo, self.strategy)
+            self.last_scheduling_seconds = time.perf_counter() - t0
+        self._iter_seen += 1
+        return self._decision
+
+    def scheduling_overhead_hidden(self, topo: TopologyCosts) -> bool:
+        """Table I check against the *topology's* gt¹ idle window: the
+        re-plan (run once, driver-side) must fit in every worker's
+        Δt + gt¹ window, so the minimum over workers binds."""
+        return self.last_scheduling_seconds <= topo.idle_window
+
+    def invalidate(self) -> None:
+        """Drop the cached decision without disturbing epoch alignment."""
+        self._decision = None
+
+    def reset(self) -> None:
+        self._decision = None
+        self._iter_seen = 0
+        self.last_scheduling_seconds = 0.0
+        self.last_makespan = 0.0

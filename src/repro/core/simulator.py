@@ -148,6 +148,65 @@ def simulate_ps_iteration(topo: TopologyCosts,
         for costs, (f, b) in zip(topo.workers, decisions)))
 
 
+@dataclasses.dataclass(frozen=True)
+class PSReplanTimeline:
+    """Per-epoch PS timelines of a run over a time-varying topology.
+
+    For each topology epoch, two simulations of one synchronous iteration:
+    ``replanned`` uses the decision derived from that epoch's costs (what
+    ``repro.ps.dynamic.DynamicPSTrainer`` executes), ``frozen`` keeps the
+    epoch-0 decision throughout (the plan-once baseline the paper's
+    run-time loop exists to beat).  The gap is the stale-plan penalty."""
+
+    replanned: Tuple[PSTimeline, ...]
+    frozen: Tuple[PSTimeline, ...]
+
+    def __post_init__(self):
+        if len(self.replanned) != len(self.frozen):
+            raise ValueError(f"{len(self.replanned)} replanned epochs vs "
+                             f"{len(self.frozen)} frozen")
+        if not self.replanned:
+            raise ValueError("need at least one epoch")
+
+    @property
+    def num_epochs(self) -> int:
+        return len(self.replanned)
+
+    @property
+    def makespans(self) -> Tuple[float, ...]:
+        return tuple(t.makespan for t in self.replanned)
+
+    @property
+    def frozen_makespans(self) -> Tuple[float, ...]:
+        return tuple(t.makespan for t in self.frozen)
+
+    def stale_plan_penalty(self, epoch: int) -> float:
+        """Seconds per iteration lost in ``epoch`` by keeping the epoch-0
+        plan instead of re-planning (>= 0 whenever the re-plan is at least
+        as good as the stale plan under the new costs)."""
+        return self.frozen_makespans[epoch] - self.makespans[epoch]
+
+
+def simulate_ps_replan(epoch_costs: Sequence[TopologyCosts],
+                       epoch_decisions: Sequence,
+                       ) -> PSReplanTimeline:
+    """Simulate re-planned vs frozen execution over topology epochs.
+
+    ``epoch_costs[e]`` is epoch ``e``'s projected :class:`TopologyCosts`;
+    ``epoch_decisions[e]`` the decision derived from it (one shared
+    decision or per-worker decisions, as ``simulate_ps_iteration``
+    accepts).  The frozen baseline runs ``epoch_decisions[0]`` against
+    every epoch's costs."""
+    if len(epoch_costs) != len(epoch_decisions):
+        raise ValueError(f"{len(epoch_costs)} epoch costs for "
+                         f"{len(epoch_decisions)} decisions")
+    replanned = tuple(simulate_ps_iteration(c, d)
+                      for c, d in zip(epoch_costs, epoch_decisions))
+    frozen = tuple(simulate_ps_iteration(c, epoch_decisions[0])
+                   for c in epoch_costs)
+    return PSReplanTimeline(replanned=replanned, frozen=frozen)
+
+
 def check_partial_orders(timeline: IterationTimeline, L: int) -> None:
     """Assert the timeline satisfies eqs. (1)-(7).  Raises on violation."""
     eps = 1e-12

@@ -79,6 +79,47 @@ class RescheduleEvent:
     trigger: str = "epoch"        # "epoch" boundary | "drift" detector
 
 
+class PlanStepCache:
+    """``BucketPlan``-keyed AOT compiled-step cache shared by the dynamic
+    drivers (this module's ``DynamicTrainer`` and
+    ``repro.ps.dynamic.DynamicPSTrainer``): each distinct plan is traced
+    and compiled exactly once (``.lower().compile()``), revisits are
+    dictionary lookups, and per-plan HLO collective counts are kept for
+    the structural assertions."""
+
+    def __init__(self):
+        self._steps: Dict[BucketPlan, Callable] = {}
+        self._hlo: Dict[BucketPlan, Tuple[int, int]] = {}
+        self.traces = 0                # compile-cache misses
+        self.hits = 0                  # plan *swaps* served from the cache
+
+    @property
+    def plans(self) -> Tuple[BucketPlan, ...]:
+        return tuple(self._steps)
+
+    def hlo_counts(self, plan: BucketPlan) -> Tuple[int, int]:
+        """(#all-gathers, #reduce-scatters) of a cached plan's step."""
+        if plan not in self._hlo:
+            raise KeyError(f"plan {plan} has no compiled step yet")
+        return self._hlo[plan]
+
+    def step_for(self, plan: BucketPlan, build_step: Callable[[], Callable],
+                 state, batch, *, count_hit: bool) -> Tuple[Callable, bool]:
+        """The compiled step for ``plan``, compiling via ``build_step()``
+        on a miss.  Returns ``(step_fn, retraced)``; ``count_hit`` tells
+        whether a cache hit is an actual plan swap (a post-restore
+        recompile of the unchanged plan is not)."""
+        if plan in self._steps:
+            if count_hit:
+                self.hits += 1
+            return self._steps[plan], False
+        self.traces += 1
+        compiled = jax.jit(build_step()).lower(state, batch).compile()
+        self._hlo[plan] = hlo_collective_counts(compiled.as_text())
+        self._steps[plan] = compiled
+        return compiled, True
+
+
 @dataclasses.dataclass
 class DynamicTrainer:
     """Epoch-boundary re-scheduling driver around :class:`ZeroTrainer`.
@@ -127,10 +168,7 @@ class DynamicTrainer:
                                 axis_name=self.axis_name,
                                 aux_weight=self.aux_weight)
         self.events: List[RescheduleEvent] = []
-        self.traces = 0                    # compiled-step cache misses
-        self.cache_hits = 0                # plan swaps served from the cache
-        self._step_cache: Dict[BucketPlan, Callable] = {}
-        self._hlo_counts: Dict[BucketPlan, Tuple[int, int]] = {}
+        self._cache = PlanStepCache()
         self._step_idx = 0
         self._decision: Optional[Decision] = None
         self._plan: Optional[BucketPlan] = None
@@ -162,14 +200,21 @@ class DynamicTrainer:
 
     @property
     def plans_seen(self) -> Tuple[BucketPlan, ...]:
-        return tuple(self._step_cache)
+        return self._cache.plans
+
+    @property
+    def traces(self) -> int:
+        """Compiled-step cache misses (one trace per distinct plan)."""
+        return self._cache.traces
+
+    @property
+    def cache_hits(self) -> int:
+        """Plan swaps served from the compiled-step cache."""
+        return self._cache.hits
 
     def hlo_counts(self, plan: Optional[BucketPlan] = None) -> Tuple[int, int]:
         """(#all-gathers, #reduce-scatters) of a cached plan's compiled step."""
-        plan = self._plan if plan is None else plan
-        if plan not in self._hlo_counts:
-            raise KeyError(f"plan {plan} has no compiled step yet")
-        return self._hlo_counts[plan]
+        return self._cache.hlo_counts(self._plan if plan is None else plan)
 
     # ------------------------------------------------------------------
     # cost vectors
@@ -297,18 +342,10 @@ class DynamicTrainer:
         prev = self._plan
         retraced = False
         if plan != prev or self._step_fn is None:
-            if plan in self._step_cache:
-                if plan != prev:
-                    self.cache_hits += 1
-            else:
-                retraced = True
-                self.traces += 1
-                fn = jax.jit(self.base.with_plan(plan).build_train_step())
-                compiled = fn.lower(state, batch).compile()
-                self._hlo_counts[plan] = hlo_collective_counts(
-                    compiled.as_text())
-                self._step_cache[plan] = compiled
-            self._step_fn = self._step_cache[plan]
+            self._step_fn, retraced = self._cache.step_for(
+                plan,
+                lambda: self.base.with_plan(plan).build_train_step(),
+                state, batch, count_hit=plan != prev)
             self._plan = plan
         self._decision = decision
         if boundary or changed:

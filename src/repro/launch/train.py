@@ -18,7 +18,17 @@ Four runtimes:
   asymmetric ``--down-gbps``/``--up-gbps`` links, consensus-planned via
   the per-topology cost model.  Synchronous by default;
   ``--staleness k`` switches to bounded-staleness asynchronous execution
-  (host-level event loop, one logical worker per ``--ps-workers``).
+  (host-level event loop, one logical worker per ``--ps-workers``),
+  with ``--throttle reject`` (stale pushes evicted) or ``--throttle
+  wait`` (SSP wait-at-barrier: nothing dropped, fast workers block).
+* ``--runtime dynamic-ps`` — the run-time loop in the PS regime: the
+  consensus plan is re-derived every ``--steps-per-epoch`` steps against
+  a *time-varying topology* (``--up-shift-gbps`` degrades every worker's
+  uplink at ``--shift-epoch``) and compiled steps are swapped from the
+  plan-keyed cache.  With ``--staleness k`` the loop goes asynchronous:
+  per-worker re-plans swapped into the bounded-staleness event loop
+  (``--throttle`` selects rejection or SSP wait), one topology epoch per
+  ``--steps-per-epoch`` accepted pushes.
 
 Examples::
 
@@ -62,7 +72,8 @@ def main() -> None:
     ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant (CPU-friendly)")
-    ap.add_argument("--runtime", choices=("local", "zero", "dynamic", "ps"),
+    ap.add_argument("--runtime",
+                    choices=("local", "zero", "dynamic", "ps", "dynamic-ps"),
                     default="local")
     ap.add_argument("--strategy", default="dynacomm",
                     choices=("sequential", "lbl", "ibatch", "dynacomm"))
@@ -92,6 +103,14 @@ def main() -> None:
     ap.add_argument("--staleness", type=int, default=None,
                     help="bounded-staleness k: switch the ps runtime to "
                          "asynchronous execution")
+    ap.add_argument("--throttle", choices=("reject", "wait"),
+                    default="reject",
+                    help="async ps: evict stale pushes (reject) or SSP "
+                         "wait-at-barrier (wait — slow workers always "
+                         "contribute)")
+    ap.add_argument("--up-shift-gbps", type=float, default=None,
+                    help="dynamic-ps: degrade every uplink to this "
+                         "bandwidth at --shift-epoch")
     ap.add_argument("--worker-flops", type=float, default=1e10,
                     help="edge-worker compute rate fed to the profiler")
     ap.add_argument("--steps", type=int, default=100)
@@ -125,6 +144,10 @@ def main() -> None:
 
     if args.runtime == "ps":
         _run_ps(args, cfg, mesh, opt, pipe, shape)
+        return
+
+    if args.runtime == "dynamic-ps":
+        _run_dynamic_ps(args, cfg, mesh, opt, pipe, shape)
         return
 
     if args.runtime == "dynamic":
@@ -192,6 +215,92 @@ def main() -> None:
                   f"{(time.perf_counter() - t0) / (i + 1):.3f}s/step")
 
 
+def _run_dynamic_ps(args, cfg, mesh, opt, pipe, shape) -> None:
+    """The run-time loop over a time-varying PS topology: once per
+    topology epoch, a consensus re-plan + compiled-step swap (sync), or a
+    per-worker re-plan swapped into the async event loop when
+    ``--staleness`` is given."""
+    from repro.ps import (DynamicPSTrainer, PSTopology, uplink_degradation)
+
+    n_dev = len(jax.devices())
+    W = (args.ps_workers or n_dev) if args.staleness is not None else n_dev
+    base = PSTopology.uniform(args.ps_servers, W,
+                              down_bps=args.down_gbps * 1e9,
+                              up_bps=args.up_gbps * 1e9,
+                              flops=args.worker_flops)
+    if args.up_shift_gbps is not None:
+        if args.up_shift_gbps <= 0:
+            raise SystemExit(f"--up-shift-gbps must be positive, got "
+                             f"{args.up_shift_gbps}")
+        factor = args.up_gbps / args.up_shift_gbps
+        topo = uplink_degradation(base, factor=factor,
+                                  at_epoch=args.shift_epoch)
+        drift = (f"uplinks {args.up_gbps} -> {args.up_shift_gbps} Gbps at "
+                 f"epoch {args.shift_epoch}")
+    else:
+        topo, drift = base, "static topology"
+    if args.staleness is not None:
+        _run_dynamic_ps_async(args, cfg, topo, opt, pipe, shape, drift)
+        return
+    dyn = DynamicPSTrainer(cfg=cfg, mesh=mesh, optimizer=opt, topology=topo,
+                           steps_per_epoch=args.steps_per_epoch,
+                           input_shape=shape, strategy=args.strategy)
+    print(f"[dynamic-ps] {args.ps_servers} shards x {n_dev} workers; "
+          f"{drift}; {args.strategy}, re-plan every "
+          f"{args.steps_per_epoch} steps")
+    state = dyn.init_state(jax.random.PRNGKey(0))
+    state, _ = dyn.run(state, pipe.batch, args.steps, log_every=10)
+    for e in dyn.events:
+        ag, rs = dyn.hlo_counts(e.plan)
+        print(f"epoch {e.epoch:3d} step {e.step:4d}: "
+              f"{len(e.plan.forward)} pull / {len(e.plan.backward)} push "
+              f"segments (hlo {ag} ag / {rs} rs)  "
+              f"{'re-segmented' if e.plan_changed else 'unchanged'}"
+              f"{' [cache hit]' if e.plan_changed and not e.retraced else ''}"
+              f"  sched {e.scheduling_seconds * 1e3:.2f} ms "
+              f"hidden={e.overhead_hidden}")
+    print(f"[dynamic-ps] traces {dyn.traces}, cache hits {dyn.cache_hits}")
+
+
+def _run_dynamic_ps_async(args, cfg, topo, opt, pipe, shape, drift) -> None:
+    """Asynchronous dynamic-PS: per-worker re-plan per topology epoch,
+    bounded staleness k with the selected throttle; one epoch spans
+    ``--steps-per-epoch`` accepted pushes, ``--steps`` pushes total."""
+    from repro.models import (init_params, params_from_sched_layers,
+                              sched_layer_trees, train_loss)
+    from repro.models.profiles import layer_profiles
+    from repro.ps import DynamicAsyncPSTrainer
+
+    layers = sched_layer_trees(init_params(cfg, jax.random.PRNGKey(0)))
+
+    def loss_fn(layer_list, batch):
+        return train_loss(cfg, params_from_sched_layers(layer_list), batch,
+                          aux_weight=0.01)
+
+    dyn = DynamicAsyncPSTrainer(
+        init_layers=layers, loss_fn=loss_fn, optimizer=opt, topology=topo,
+        pushes_per_epoch=args.steps_per_epoch, staleness=args.staleness,
+        throttle=args.throttle, strategy=args.strategy,
+        profiles=layer_profiles(cfg, shape))
+    print(f"[dynamic-ps] async: {dyn.topology.topology_at(0).num_servers} "
+          f"shards x {dyn.topology.num_workers} logical workers; {drift}; "
+          f"k={args.staleness} ({args.throttle} throttle), "
+          f"{args.strategy}, re-plan every {args.steps_per_epoch} of "
+          f"{args.steps} pushes")
+    log = dyn.run_pushes(args.steps, lambda w, i: pipe.batch(w * 100003 + i))
+    for e in dyn.events:
+        segs = [(len(p.forward), len(p.backward)) for p in e.worker_plans]
+        print(f"epoch {e.epoch:3d} @push {e.at_push:4d}: per-worker "
+              f"pull/push segments {segs}  "
+              f"{'re-segmented' if e.plan_changed else 'unchanged'}  "
+              f"sched {e.scheduling_seconds * 1e3:.2f} ms "
+              f"hidden={e.overhead_hidden}")
+    print(f"[dynamic-ps] {len(log.accepted)} pushes accepted, "
+          f"{log.num_rejected} rejected, {log.total_wait_s:.4f}s waited "
+          f"at the SSP barrier, max staleness {log.max_staleness} <= k, "
+          f"simulated makespan {log.makespan:.4f}s")
+
+
 def _run_ps(args, cfg, mesh, opt, pipe, shape) -> None:
     """The parameter-server runtime: sync on the mesh, or async with a
     bounded staleness k (host-level event loop over logical workers)."""
@@ -248,15 +357,18 @@ def _run_ps(args, cfg, mesh, opt, pipe, shape) -> None:
 
     tr = AsyncPSTrainer(init_layers=layers, loss_fn=loss_fn, optimizer=opt,
                         topology=topo, plan=plan,
-                        staleness=args.staleness, costs=costs)
+                        staleness=args.staleness, throttle=args.throttle,
+                        costs=costs)
     print(f"[ps] async: {topo.num_servers} shards x {W} logical workers, "
-          f"staleness bound k={args.staleness}; {args.strategy}: "
+          f"staleness bound k={args.staleness} ({args.throttle} throttle); "
+          f"{args.strategy}: "
           f"{len(plan.forward)} pull / {len(plan.backward)} push segments "
           f"(sync makespan would be {makespan:.4f}s)")
     log = tr.run(args.steps, lambda w, i: pipe.batch(w * 100003 + i))
     acc = log.accepted
     print(f"[ps] {len(acc)} pushes accepted, {log.num_rejected} rejected "
-          f"(stale), max staleness {log.max_staleness} <= k, simulated "
+          f"(stale), {log.total_wait_s:.4f}s waited at the SSP barrier, "
+          f"max staleness {log.max_staleness} <= k, simulated "
           f"makespan {log.makespan:.4f}s")
     for e in acc[:: max(1, len(acc) // 10)]:
         print(f"  t={e.sim_time:8.4f}s worker {e.worker} v{e.version:3d} "

@@ -5,19 +5,31 @@
 own deployment shape: S server shards × W edge workers, segmented
 parameter pulls down and gradient pushes up over per-worker asymmetric
 links, synchronously (``PSTrainer``, bit-identical to the ZeRO trainer)
-or asynchronously under a bounded staleness ``k`` (``AsyncPSTrainer``).
+or asynchronously under a bounded staleness ``k`` (``AsyncPSTrainer``,
+with server-side rejection or SSP wait-at-barrier throttling).
+
+``TopologySchedule`` makes the fabric time-varying, and the
+``repro.ps.dynamic`` drivers re-derive the decomposition once per
+topology epoch — the paper's run-time loop in the PS regime.
 """
 
-from repro.ps.async_mode import (AsyncPSTrainer, AsyncPushEvent,
+from repro.ps.async_mode import (THROTTLES, AsyncPSTrainer, AsyncPushEvent,
                                  AsyncRunLog)
+from repro.ps.dynamic import (AsyncRescheduleEvent, DynamicAsyncPSTrainer,
+                              DynamicPSTrainer, profiles_from_specs)
 from repro.ps.server import (PSServer, PushResult, StaleVersion,
                              TransferLedger)
-from repro.ps.topology import LinkModel, PSTopology, asymmetric_link
+from repro.ps.topology import (LinkModel, PSTopology, TopologySchedule,
+                               as_topology_schedule, asymmetric_link,
+                               uplink_degradation)
 from repro.ps.worker import PSTrainer
 
 __all__ = [
     "LinkModel", "PSTopology", "asymmetric_link",
+    "TopologySchedule", "as_topology_schedule", "uplink_degradation",
     "PSServer", "PushResult", "StaleVersion", "TransferLedger",
     "PSTrainer",
-    "AsyncPSTrainer", "AsyncPushEvent", "AsyncRunLog",
+    "THROTTLES", "AsyncPSTrainer", "AsyncPushEvent", "AsyncRunLog",
+    "AsyncRescheduleEvent", "DynamicAsyncPSTrainer", "DynamicPSTrainer",
+    "profiles_from_specs",
 ]

@@ -3,20 +3,50 @@
 Synchronous mode (``repro.ps.worker.PSTrainer``) pays the straggler at
 every barrier; this module removes the barrier: each worker pulls a
 parameter snapshot, computes gradients *against that version*, and pushes
-— the server accepts the push only if the worker is at most ``k``
-versions behind the head (Stale Synchronous Parallel, k=0 degenerating to
-fully-serialized sequential SGD).  A rejected worker re-pulls the head
-version and recomputes, which is exactly the liveness rule that bounds
-every *applied* gradient's staleness by ``k``.
+— every *applied* gradient's staleness (head version at commit minus the
+version it was computed at) is bounded by ``k``.  Two throttle
+disciplines enforce the bound:
+
+* ``throttle="reject"`` — the server-side gate of PR 3: a push staler
+  than ``k`` at commit time is evicted and the worker re-pulls the head
+  and recomputes.  Simple, but fast workers advance the head while a slow
+  worker computes, so a worker ~W× slower than the rest can be rejected
+  *every* time at small ``k`` — it never contributes (the starvation
+  regression test pins this down).
+* ``throttle="wait"`` — Stale Synchronous Parallel wait-at-barrier
+  semantics: nobody's gradients are ever dropped; instead the *fast*
+  side blocks.  Two gates in the discrete-event loop:
+
+  1. **admission** — a worker may start a new pull+compute only while at
+     most ``k`` other computations are in flight (uncommitted), because
+     under global versioning every in-flight computation is a future head
+     increment: admitting a (k+2)-th concurrent computation would force
+     some commit beyond the bound;
+  2. **commit barrier** — a completed computation commits only once its
+     pinned version is the *minimum* over all in-flight computations;
+     fresher completions wait at the barrier until the laggard commits
+     (ties drain in completion order, then worker id).
+
+  Together these guarantee every push is accepted with staleness <= k and
+  every worker — however slow — eventually contributes; ``k=0``
+  degenerates to fully-serialized sequential SGD, exactly as in reject
+  mode, but with waiting instead of wasted recomputation.
 
 Execution is a deterministic discrete-event simulation driven by the
 topology's per-worker costs: each worker's pull → compute → push latency
-comes from its own ``LayerCosts`` under the shared ``BucketPlan`` (via
-``core.simulator``), the event queue orders commits by simulated time
+comes from its own ``LayerCosts`` under its ``BucketPlan`` (via
+``core.simulator``), the event queue orders completions by simulated time
 (ties by worker id), and gradient math runs for real through one jitted
 ``value_and_grad`` shared by all workers — so runs are reproducible
 bit-for-bit and the staleness trace is machine-checkable, while losses
 come from actually training the model (the smoke-CNN convergence test).
+
+Plans may differ per worker (the asynchronous planning mode of
+``core.scheduler.schedule_topology``: each worker overlaps its own link
+with its own compute, so the optimal decomposition is per-worker); pass a
+sequence of ``BucketPlan``s, one per worker, instead of a single shared
+plan.  ``set_plans`` swaps plans between (not during) event-loop runs —
+the ``repro.ps.dynamic`` driver uses this on topology-epoch boundaries.
 
 The trainer is generic over "a model whose parameters are a list of
 per-layer pytrees + a loss function": the smoke CNN
@@ -28,7 +58,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 
@@ -39,6 +70,8 @@ from repro.dist.collectives import (FlatSpec, flatten_tree, make_flat_spec,
 from repro.optim import Optimizer
 from repro.ps.server import PSServer, PushResult, StaleVersion
 from repro.ps.topology import PSTopology
+
+THROTTLES = ("reject", "wait")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +84,7 @@ class AsyncPushEvent:
     result: PushResult
     loss: float
     retries: int              # stale rejections before this commit
+    wait_s: float = 0.0       # wait throttle: seconds blocked at the barrier
 
 
 @dataclasses.dataclass
@@ -77,6 +111,19 @@ class AsyncRunLog:
     def makespan(self) -> float:
         return max((e.sim_time for e in self.events), default=0.0)
 
+    @property
+    def total_wait_s(self) -> float:
+        """Simulated seconds spent blocked at the SSP barrier (0 under the
+        reject throttle)."""
+        return sum(e.wait_s for e in self.events)
+
+    def accepted_by_worker(self) -> Dict[int, int]:
+        """{worker: number of accepted pushes} (workers with none absent)."""
+        out: Dict[int, int] = {}
+        for e in self.accepted:
+            out[e.worker] = out.get(e.worker, 0) + 1
+        return out
+
 
 class AsyncPSTrainer:
     """Event-driven bounded-staleness trainer over a PS topology.
@@ -91,10 +138,15 @@ class AsyncPSTrainer:
         by every worker.
     plan:
         the shared ``BucketPlan`` — each forward bucket is one pull
-        message, each backward bucket one push message.
+        message, each backward bucket one push message — or one plan per
+        worker (the per-worker asynchronous planning mode).
     staleness:
-        the bound ``k``: a push computed at version ``v`` commits only if
-        ``head − v ≤ k``.
+        the bound ``k``: an applied push computed at version ``v``
+        satisfies ``head − v ≤ k`` at commit.
+    throttle:
+        ``"reject"`` (server evicts stale pushes, workers recompute) or
+        ``"wait"`` (SSP wait-at-barrier: fast workers block, nothing is
+        dropped — see the module docstring).
     costs:
         optional per-worker ``TopologyCosts`` driving the simulated
         clock; without it every worker's iteration costs one unit, which
@@ -104,22 +156,21 @@ class AsyncPSTrainer:
     def __init__(self, *, init_layers: Sequence[Any],
                  loss_fn: Callable[[List[Any], Dict[str, Any]], Any],
                  optimizer: Optimizer, topology: PSTopology,
-                 plan: BucketPlan, staleness: int = 1,
+                 plan: Union[BucketPlan, Sequence[BucketPlan]],
+                 staleness: int = 1, throttle: str = "reject",
                  costs: Optional[TopologyCosts] = None):
         init_layers = list(init_layers)
         if not init_layers:
             raise ValueError("need at least one layer tree")
+        if throttle not in THROTTLES:
+            raise ValueError(f"throttle must be one of {THROTTLES}, got "
+                             f"{throttle!r}")
         self.topology = topology
-        self.plan = plan
         self.staleness = staleness
+        self.throttle = throttle
         self.specs: Tuple[FlatSpec, ...] = tuple(
             make_flat_spec(t, 1) for t in init_layers)
-        L = len(self.specs)
-        for direction in ("forward", "backward"):
-            covered = sorted(l for b in getattr(plan, direction) for l in b)
-            if covered != list(range(L)):
-                raise ValueError(f"plan's {direction} buckets cover layers "
-                                 f"{covered}, model has 0..{L - 1}")
+        self._plans = self._as_worker_plans(plan)
         flats = [flatten_tree(t, s) for t, s in zip(init_layers, self.specs)]
         self.server = PSServer(self.specs, topology, optimizer, flats,
                                staleness_bound=staleness)
@@ -129,6 +180,68 @@ class AsyncPSTrainer:
                              f"topology has {topology.num_workers}")
         self._costs = costs
         self._durations = self._iteration_durations()
+        self._loop: Optional[_LoopState] = None
+
+    # ------------------------------------------------------------------
+    # plans (shared or per-worker, swappable between runs)
+    # ------------------------------------------------------------------
+
+    @property
+    def plan(self) -> BucketPlan:
+        """The shared plan; raises if workers run distinct plans."""
+        distinct = set(self._plans)
+        if len(distinct) != 1:
+            raise ValueError("workers run per-worker plans; use plans")
+        return self._plans[0]
+
+    @property
+    def plans(self) -> Tuple[BucketPlan, ...]:
+        """One plan per worker (identical entries under a shared plan)."""
+        return self._plans
+
+    def _as_worker_plans(self, plan) -> Tuple[BucketPlan, ...]:
+        W = self.topology.num_workers
+        if isinstance(plan, BucketPlan):
+            worker_plans = (plan,) * W
+        else:
+            worker_plans = tuple(plan)
+            if len(worker_plans) != W:
+                raise ValueError(f"{len(worker_plans)} plans for {W} "
+                                 f"workers")
+        L = len(self.specs)
+        for p in dict.fromkeys(worker_plans):
+            for direction in ("forward", "backward"):
+                covered = sorted(l for b in getattr(p, direction) for l in b)
+                if covered != list(range(L)):
+                    raise ValueError(f"plan's {direction} buckets cover "
+                                     f"layers {covered}, model has "
+                                     f"0..{L - 1}")
+        return worker_plans
+
+    def set_plans(self, plan: Union[BucketPlan, Sequence[BucketPlan]],
+                  costs: Optional[TopologyCosts] = None,
+                  topology: Optional[PSTopology] = None) -> None:
+        """Swap the active plan(s) — and optionally the simulated-clock
+        costs and the topology itself — between event-loop runs (a
+        topology-epoch boundary).  In-flight computations keep the
+        durations they started with; new admissions use the new plans.
+        A new ``topology`` is forwarded to the server (shard routing,
+        ledger); its worker count must not change."""
+        if topology is not None:
+            if topology.num_workers != self.topology.num_workers:
+                raise ValueError(
+                    f"new topology has {topology.num_workers} workers, "
+                    f"trainer was built with {self.topology.num_workers} — "
+                    f"workers cannot join or leave mid-run")
+            self.topology = topology
+            self.server.topology = topology
+        self._plans = self._as_worker_plans(plan)
+        if costs is not None:
+            if costs.num_workers != self.topology.num_workers:
+                raise ValueError(f"costs for {costs.num_workers} workers, "
+                                 f"topology has {self.topology.num_workers}")
+            self._costs = costs
+        self._durations = self._iteration_durations()
 
     def _iteration_durations(self) -> Tuple[float, ...]:
         if self._costs is None:
@@ -137,9 +250,9 @@ class AsyncPSTrainer:
             flops = self.topology.worker_flops
             fastest = max(flops)
             return tuple(fastest / f for f in flops)
-        decision = decision_from_plan(self.plan)
-        return tuple(iteration_time(c, *decision)
-                     for c in self._costs.workers)
+        return tuple(
+            iteration_time(c, *decision_from_plan(p))
+            for c, p in zip(self._costs.workers, self._plans))
 
     # ------------------------------------------------------------------
     # one worker attempt: segmented pull → grads → segmented push
@@ -151,7 +264,7 @@ class AsyncPSTrainer:
             version: Optional[int] = None
             buffers: Dict[int, Any] = {}
             try:
-                for bucket in self.plan.forward:
+                for bucket in self._plans[worker].forward:
                     v, flats = self.server.pull_bucket(
                         bucket, version=version, worker=worker)
                     version = v
@@ -172,7 +285,7 @@ class AsyncPSTrainer:
               grads: List[Any]) -> PushResult:
         """Push every backward segment; the last one commits."""
         result: Optional[PushResult] = None
-        for bucket in self.plan.backward:
+        for bucket in self._plans[worker].backward:
             flat_grads = {l: flatten_tree(grads[l], self.specs[l])
                           for l in bucket}
             result = self.server.push_bucket(worker, version, bucket,
@@ -185,7 +298,8 @@ class AsyncPSTrainer:
     # ------------------------------------------------------------------
 
     def run(self, num_pushes: int,
-            batch_fn: Callable[[int, int], Any]) -> AsyncRunLog:
+            batch_fn: Callable[[int, int], Any], *,
+            reset: bool = True) -> AsyncRunLog:
         """Run until ``num_pushes`` gradient pushes were *accepted*.
 
         Each worker pulls + computes at the *start* of its iteration and
@@ -193,42 +307,151 @@ class AsyncPSTrainer:
         workers' commits land in between, which is where staleness comes
         from.  ``batch_fn(worker, attempt_idx) -> batch`` supplies data;
         the attempt index increments per computation (including retries
-        after a stale rejection), so every retry sees fresh data."""
+        after a stale rejection), so every attempt sees fresh data.
+
+        ``reset=False`` continues a previous run's event loop (simulated
+        clock, in-flight computations, and attempt counters carry over;
+        the returned log is cumulative) — the dynamic-PS driver runs one
+        topology epoch per call this way."""
         if num_pushes < 1:
             raise ValueError(f"num_pushes must be >= 1, got {num_pushes}")
-        log = AsyncRunLog()
-        W = self.topology.num_workers
-        attempts = [0] * W
-        retries = [0] * W
-        num_accepted = 0
-        # (commit time, worker id, compute version, loss, grads); one
-        # in-flight iteration per worker makes (time, id) unique, so the
-        # payload is never compared.
-        queue: List[Tuple[float, int, int, float, List[Any]]] = []
-        for w in range(W):
-            loss, version, grads = self._compute(w, batch_fn(w, 0))
-            attempts[w] = 1
-            heapq.heappush(queue, (self._durations[w], w, version, loss,
-                                   grads))
-        while num_accepted < num_pushes:
-            t, w, version, loss, grads = heapq.heappop(queue)
+        if reset or self._loop is None:
+            self._loop = _LoopState(log=AsyncRunLog(),
+                                    parked=list(range(
+                                        self.topology.num_workers)))
+        loop = self._loop
+        target = loop.accepted + num_pushes
+        if self.throttle == "wait":
+            self._run_wait(loop, target, batch_fn)
+        else:
+            self._run_reject(loop, target, batch_fn)
+        return loop.log
+
+    # -- shared helpers -------------------------------------------------
+
+    def _start(self, loop: "_LoopState", worker: int, now: float,
+               batch_fn) -> None:
+        """Admit ``worker``: pull at the head, compute, schedule commit."""
+        loss, version, grads = self._compute(
+            worker, batch_fn(worker, loop.attempts[worker]))
+        loop.attempts[worker] += 1
+        heapq.heappush(loop.queue,
+                       (now + self._durations[worker], worker, version,
+                        loss, grads))
+
+    # -- reject throttle (PR 3 semantics, unchanged) --------------------
+
+    def _run_reject(self, loop: "_LoopState", target: int,
+                    batch_fn) -> None:
+        """Server-side eviction: every worker is always in flight; a push
+        staler than k is rejected at commit and the worker recomputes."""
+        while loop.parked:                      # admission is unconditional
+            self._start(loop, loop.parked.pop(0), loop.now, batch_fn)
+        while loop.accepted < target:
+            t, w, version, loss, grads = heapq.heappop(loop.queue)
+            loop.now = t
             result = self._push(w, version, grads)
-            log.events.append(AsyncPushEvent(
+            loop.log.events.append(AsyncPushEvent(
                 worker=w, sim_time=t, version=version, result=result,
-                loss=loss, retries=retries[w]))
-            num_accepted += int(result.accepted)
-            retries[w] = retries[w] + 1 if not result.accepted else 0
-            loss, version, grads = self._compute(w, batch_fn(w, attempts[w]))
-            attempts[w] += 1
-            heapq.heappush(queue, (t + self._durations[w], w, version, loss,
-                                   grads))
-        return log
+                loss=loss, retries=loop.retries[w]))
+            loop.accepted += int(result.accepted)
+            loop.retries[w] = loop.retries[w] + 1 if not result.accepted \
+                else 0
+            self._start(loop, w, t, batch_fn)
+
+    # -- wait throttle (SSP wait-at-barrier) ----------------------------
+
+    def _run_wait(self, loop: "_LoopState", target: int, batch_fn) -> None:
+        """SSP semantics: admission gate + min-version commit barrier (see
+        the module docstring).  Every push commits; nothing is dropped."""
+        k = self.staleness
+
+        def in_flight() -> int:
+            return len(loop.queue) + len(loop.barrier)
+
+        def admit(now: float) -> None:
+            while loop.parked and in_flight() <= k:
+                self._start(loop, loop.parked.pop(0), now, batch_fn)
+
+        def min_pin() -> int:
+            return min([e[2] for e in loop.queue] +
+                       [v for v, _, _, _, _ in loop.barrier])
+
+        def drain(now: float) -> None:
+            """Commit every barrier entry whose pin is the in-flight
+            minimum, in (pin, completion, worker) order."""
+            while loop.barrier and loop.accepted < target:
+                loop.barrier.sort()
+                pin, done_t, w, loss, grads = loop.barrier[0]
+                if pin > min_pin():
+                    return                     # blocked on a laggard
+                loop.barrier.pop(0)
+                assert self.server.head_distance(pin) <= k, \
+                    "SSP gates must keep every commit within the bound"
+                result = self._push(w, pin, grads)
+                assert result.accepted, \
+                    "a wait-throttled push can never be stale at commit"
+                wait_s = now - done_t
+                if wait_s > 0:
+                    self.server.ledger.waited_pushes += 1
+                loop.log.events.append(AsyncPushEvent(
+                    worker=w, sim_time=now, version=pin, result=result,
+                    loss=loss, retries=0, wait_s=wait_s))
+                loop.accepted += 1
+                loop.parked.append(w)          # wants its next iteration
+                admit(now)                     # a slot just freed up
+
+        # a resumed run may hold entries that became eligible exactly when
+        # the previous run hit its push target: commit them at the clock
+        # they were eligible, before waiting on any new completion
+        drain(loop.now)
+        admit(loop.now)
+        while loop.accepted < target:
+            t, w, version, loss, grads = heapq.heappop(loop.queue)
+            loop.now = t
+            loop.barrier.append((version, t, w, loss, grads))
+            drain(t)
 
     # ------------------------------------------------------------------
     # interop
     # ------------------------------------------------------------------
 
+    @property
+    def log(self) -> Optional[AsyncRunLog]:
+        """The (cumulative) log of the current run, if one is active."""
+        return self._loop.log if self._loop is not None else None
+
     def layer_params(self) -> List[Any]:
         """Head-version parameters, unflattened to the layer pytrees."""
         return [unflatten_tree(f, s)
                 for f, s in zip(self.server.flats(), self.specs)]
+
+
+@dataclasses.dataclass
+class _LoopState:
+    """Resumable discrete-event loop state.
+
+    ``queue`` holds in-flight computations as ``(commit time, worker id,
+    compute version, loss, grads)`` — one in-flight iteration per worker
+    makes ``(time, id)`` unique, so the payload is never compared.
+    ``barrier`` holds completed-but-uncommitted computations (wait
+    throttle) as ``(pin version, completion time, worker, loss, grads)``;
+    ``parked`` holds workers awaiting admission, FIFO.
+    """
+
+    log: AsyncRunLog
+    parked: List[int]
+    queue: List[Tuple[float, int, int, float, List[Any]]] = \
+        dataclasses.field(default_factory=list)
+    barrier: List[Tuple[int, float, int, float, List[Any]]] = \
+        dataclasses.field(default_factory=list)
+    now: float = 0.0
+    accepted: int = 0              # incremental len(log.accepted)
+    attempts: Dict[int, int] = None
+    retries: Dict[int, int] = None
+
+    def __post_init__(self):
+        if self.attempts is None:
+            self.attempts = {w: 0 for w in self.parked}
+        if self.retries is None:
+            self.retries = {w: 0 for w in self.parked}

@@ -1,0 +1,343 @@
+"""Run-time re-planning for the parameter-server subsystem.
+
+``repro.dist.dynamic.DynamicTrainer`` closed the paper's run-time loop for
+the flat ZeRO cluster; this module closes it for the paper's *actual*
+deployment topology.  A :class:`repro.ps.topology.TopologySchedule` makes
+the fabric time-varying — per-link bandwidth/RTT and per-worker compute
+rates shifting on epoch boundaries — and two drivers re-derive the
+layer-wise decomposition whenever the topology shifts:
+
+* :class:`DynamicPSTrainer` (synchronous, compiled): once per topology
+  epoch, re-projects the active topology onto per-worker
+  ``TopologyCosts``, re-runs the straggler-minimizing
+  ``consensus_decision``, and swaps the compiled pull/push step from a
+  ``BucketPlan``-keyed AOT cache (the ``dist/dynamic.py`` pattern:
+  ``.lower().compile()`` once per distinct plan, revisits are dictionary
+  lookups).  The ZeRO/PS state layout (one ``FlatSpec`` flat buffer per
+  sched layer) is plan-independent, so states carry across swaps and the
+  loss trajectory is bit-identical to statically running each epoch's
+  plan (asserted by ``tests/test_dynamic.py``).
+* :class:`DynamicAsyncPSTrainer` (asynchronous, event-driven): once per
+  topology epoch, re-runs per-worker ``schedule_topology`` — each worker
+  gets its own decomposition, matched to its own link and compute rate —
+  and swaps the plans (and the simulated-clock costs) into the resumable
+  :class:`repro.ps.async_mode.AsyncPSTrainer` loop, under either throttle
+  discipline.
+
+Every re-plan records a reschedule event carrying the scheduling wall
+time and the paper's Table I overhead-hidden check against the topology's
+Δt + gt¹ idle window (the minimum over workers — the re-plan must hide
+behind *every* worker's last in-flight gradient push).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.buckets import BucketPlan, plan_from_decision
+from repro.core.costmodel import TopologyCosts
+from repro.core.profiler import LayerProfile
+from repro.core.scheduler import TopologyScheduler
+from repro.dist.dynamic import PlanStepCache, RescheduleEvent
+from repro.models import model as model_lib
+from repro.models.profiles import layer_profiles
+from repro.optim import Optimizer
+from repro.ps.async_mode import AsyncPSTrainer, AsyncRunLog
+from repro.ps.topology import TopologySchedule, as_topology_schedule
+from repro.ps.worker import PSTrainer
+
+
+def profiles_from_specs(specs, *, flops_per_param: float = 4.0
+                        ) -> Tuple[LayerProfile, ...]:
+    """Synthesize layer workloads from flat-buffer specs (models without
+    an analytic profile zoo entry, e.g. the smoke CNN): bytes are the
+    exact parameter payloads, FLOPs a uniform multiple of the parameter
+    count — enough structure for per-worker *relative* planning."""
+    return tuple(LayerProfile(name=f"layer{l}", param_bytes=s.total * 4.0,
+                              flops_fwd=flops_per_param * s.total)
+                 for l, s in enumerate(specs))
+
+
+@dataclasses.dataclass
+class DynamicPSTrainer:
+    """Topology-epoch re-planning driver around :class:`PSTrainer` (sync).
+
+    ``topology`` may be a static :class:`PSTopology` or a
+    :class:`TopologySchedule`; the schedule's ``num_workers`` must equal
+    the mesh's ``axis_name`` size (one synchronous worker per device, and
+    workers cannot join or leave mid-run).
+    """
+
+    cfg: ArchConfig
+    mesh: Any
+    optimizer: Optimizer
+    topology: Any                  # PSTopology | TopologySchedule
+    steps_per_epoch: int
+    input_shape: InputShape
+    strategy: str = "dynacomm"
+    zero3: bool = False
+    axis_name: str = "data"
+    aux_weight: float = 0.01
+
+    def __post_init__(self):
+        if self.steps_per_epoch < 1:
+            raise ValueError(f"steps_per_epoch must be >= 1, got "
+                             f"{self.steps_per_epoch}")
+        self.topology: TopologySchedule = as_topology_schedule(self.topology)
+        self.scheduler = TopologyScheduler(
+            strategy=self.strategy, reschedule_every=self.steps_per_epoch,
+            mode="consensus")
+        self._profiles = layer_profiles(self.cfg, self.input_shape)
+        Ls = model_lib.num_sched_layers(self.cfg)
+        seq = BucketPlan(forward=(tuple(range(Ls)),),
+                         backward=(tuple(range(Ls - 1, -1, -1)),))
+        self.base = PSTrainer(cfg=self.cfg, mesh=self.mesh, plan=seq,
+                              optimizer=self.optimizer,
+                              topology=self.topology.topology_at(0),
+                              zero3=self.zero3, axis_name=self.axis_name,
+                              aux_weight=self.aux_weight)
+        self.events: List[RescheduleEvent] = []
+        self._cache = PlanStepCache()
+        self._step_idx = 0
+        self._plan: Optional[BucketPlan] = None
+        self._step_fn: Optional[Callable] = None
+        self._costs: Optional[TopologyCosts] = None
+
+    # ------------------------------------------------------------------
+    # state / introspection
+    # ------------------------------------------------------------------
+
+    def init_state(self, key):
+        return self.base.init_state(key)
+
+    @property
+    def step_index(self) -> int:
+        return self._step_idx
+
+    @property
+    def epoch(self) -> int:
+        return self._step_idx // self.steps_per_epoch
+
+    @property
+    def plan(self) -> Optional[BucketPlan]:
+        """The currently active bucket plan (None before the first step)."""
+        return self._plan
+
+    @property
+    def plans_seen(self) -> Tuple[BucketPlan, ...]:
+        return self._cache.plans
+
+    @property
+    def traces(self) -> int:
+        """Compiled-step cache misses (one trace per distinct plan)."""
+        return self._cache.traces
+
+    @property
+    def cache_hits(self) -> int:
+        """Plan swaps served from the compiled-step cache."""
+        return self._cache.hits
+
+    def hlo_counts(self, plan: Optional[BucketPlan] = None) -> Tuple[int, int]:
+        """(#all-gathers, #reduce-scatters) of a cached plan's compiled
+        step — one pull + one push collective per plan segment."""
+        return self._cache.hlo_counts(self._plan if plan is None else plan)
+
+    def costs_for_epoch(self, epoch: int) -> TopologyCosts:
+        """The active topology's per-worker cost projection."""
+        return self.topology.topology_at(epoch).topology_costs(
+            self._profiles)
+
+    def timeline(self, epoch: Optional[int] = None):
+        """Per-worker timeline of the *active* plan against an epoch's
+        topology costs (current epoch by default)."""
+        from repro.core.buckets import decision_from_plan
+        from repro.core.simulator import simulate_ps_iteration
+        if self._plan is None:
+            raise ValueError("no active plan yet — run at least one step")
+        epoch = self.epoch if epoch is None else epoch
+        return simulate_ps_iteration(self.costs_for_epoch(epoch),
+                                     decision_from_plan(self._plan))
+
+    def replan_timeline(self):
+        """Re-planned vs frozen-epoch-0-plan makespans across the epochs
+        re-scheduled so far (:func:`core.simulator.simulate_ps_replan`) —
+        the stale-plan penalty this driver exists to reclaim."""
+        from repro.core.simulator import simulate_ps_replan
+        from repro.core.buckets import decision_from_plan
+        if not self.events:
+            raise ValueError("no reschedule events yet")
+        by_epoch = {e.epoch: e.plan for e in self.events}
+        epochs = sorted(by_epoch)
+        costs = [self.costs_for_epoch(e) for e in epochs]
+        decisions = [decision_from_plan(by_epoch[e]) for e in epochs]
+        return simulate_ps_replan(costs, decisions)
+
+    # ------------------------------------------------------------------
+    # the dynamic loop
+    # ------------------------------------------------------------------
+
+    def _maybe_reschedule(self, i: int, state, batch) -> None:
+        boundary = i % self.steps_per_epoch == 0
+        if boundary:
+            epoch = i // self.steps_per_epoch
+            self._costs = self.costs_for_epoch(epoch)
+            # the compiled data path is topology-independent; the base
+            # trainer's accounting views (segment owners, transfer bytes,
+            # timelines) should reflect the active fabric
+            self.base.topology = self.topology.topology_at(epoch)
+        decision = self.scheduler.decision_for_iteration(self._costs)
+        if not boundary and self._step_fn is not None:
+            return
+        plan = plan_from_decision(*decision, self.base.num_layers)
+        prev = self._plan
+        retraced = False
+        if plan != prev or self._step_fn is None:
+            self._step_fn, retraced = self._cache.step_for(
+                plan,
+                lambda: self.base.with_plan(plan).build_train_step(),
+                state, batch, count_hit=plan != prev)
+            self._plan = plan
+        self.events.append(RescheduleEvent(
+            step=i, epoch=i // self.steps_per_epoch, plan=plan,
+            plan_changed=prev is not None and plan != prev,
+            retraced=retraced,
+            scheduling_seconds=self.scheduler.last_scheduling_seconds,
+            overhead_hidden=self.scheduler.scheduling_overhead_hidden(
+                self._costs),
+            trigger="epoch"))
+
+    def step(self, state, batch):
+        """One training step; re-plans on topology-epoch boundaries.
+        Returns ``(new_state, mean_loss)``."""
+        self._maybe_reschedule(self._step_idx, state, batch)
+        new_state, loss = self._step_fn(state, batch)
+        self._step_idx += 1
+        return new_state, loss
+
+    def run(self, state, batch_fn: Callable[[int], Any], num_steps: int, *,
+            log_every: int = 0):
+        """Drive ``num_steps`` steps with ``batch_fn(i) -> batch``.
+
+        Returns ``(state, losses)`` with one float loss per step."""
+        losses: List[float] = []
+        for i in range(num_steps):
+            state, loss = self.step(state, batch_fn(i))
+            losses.append(float(loss))
+            if log_every and (i + 1) % log_every == 0:
+                f, b = (len(self._plan.forward), len(self._plan.backward))
+                print(f"step {i + 1:4d}  epoch {self.epoch}  "
+                      f"loss {losses[-1]:.4f}  segments {f}/{b}")
+        return state, losses
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncRescheduleEvent:
+    """One per-worker re-planning pass of the asynchronous driver."""
+
+    epoch: int
+    at_push: int                  # accepted pushes when the pass ran
+    worker_plans: Tuple[BucketPlan, ...]
+    plan_changed: bool            # any worker's plan differed from before
+    scheduling_seconds: float
+    overhead_hidden: bool         # fits the topology's min Δt + gt¹ window
+
+
+class DynamicAsyncPSTrainer:
+    """Topology-epoch re-planning around :class:`AsyncPSTrainer`.
+
+    Asynchronous execution has no shared program to recompile — each
+    worker plans for itself — so a topology epoch here is a span of
+    ``pushes_per_epoch`` *accepted* pushes (the async loop's notion of
+    progress), and a re-plan swaps per-worker plans and simulated-clock
+    costs into the resumable event loop between epochs.
+    """
+
+    def __init__(self, *, init_layers: Sequence[Any],
+                 loss_fn: Callable[[List[Any], Dict[str, Any]], Any],
+                 optimizer: Optimizer, topology: Any,
+                 pushes_per_epoch: int, staleness: int = 1,
+                 throttle: str = "reject", strategy: str = "dynacomm",
+                 profiles: Optional[Sequence[LayerProfile]] = None):
+        if pushes_per_epoch < 1:
+            raise ValueError(f"pushes_per_epoch must be >= 1, got "
+                             f"{pushes_per_epoch}")
+        self.topology: TopologySchedule = as_topology_schedule(topology)
+        self.pushes_per_epoch = pushes_per_epoch
+        self.scheduler = TopologyScheduler(strategy=strategy,
+                                           reschedule_every=1,
+                                           mode="per-worker")
+        self.events: List[AsyncRescheduleEvent] = []
+        self._epoch = 0
+        # plan epoch 0 before building the trainer (it needs plans)
+        self.trainer = AsyncPSTrainer(
+            init_layers=init_layers, loss_fn=loss_fn, optimizer=optimizer,
+            topology=self.topology.topology_at(0),
+            plan=BucketPlan(
+                forward=(tuple(range(len(init_layers))),),
+                backward=(tuple(range(len(init_layers) - 1, -1, -1)),)),
+            staleness=staleness, throttle=throttle)
+        self._profiles = (tuple(profiles) if profiles is not None
+                          else profiles_from_specs(self.trainer.specs))
+        self._worker_plans: Optional[Tuple[BucketPlan, ...]] = None
+        self._replan(0)
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def worker_plans(self) -> Tuple[BucketPlan, ...]:
+        return self._worker_plans
+
+    def costs_for_epoch(self, epoch: int) -> TopologyCosts:
+        return self.topology.topology_at(epoch).topology_costs(
+            self._profiles)
+
+    def _replan(self, epoch: int) -> None:
+        costs = self.costs_for_epoch(epoch)
+        L = costs.num_layers
+        # reschedule_every=1: every decision_for_iteration call re-plans
+        decisions = self.scheduler.decision_for_iteration(costs)
+        plans = tuple(plan_from_decision(*d, L) for d in decisions)
+        prev = self._worker_plans
+        self._worker_plans = plans
+        self.trainer.set_plans(plans, costs,
+                               topology=self.topology.topology_at(epoch))
+        accepted = 0 if self.trainer.log is None \
+            else len(self.trainer.log.accepted)
+        self.events.append(AsyncRescheduleEvent(
+            epoch=epoch, at_push=accepted, worker_plans=plans,
+            plan_changed=prev is not None and plans != prev,
+            scheduling_seconds=self.scheduler.last_scheduling_seconds,
+            overhead_hidden=self.scheduler.scheduling_overhead_hidden(
+                costs)))
+
+    def run(self, num_epochs: int,
+            batch_fn: Callable[[int, int], Any]) -> AsyncRunLog:
+        """Run ``num_epochs`` topology epochs of ``pushes_per_epoch``
+        accepted pushes each, re-planning per-worker on each boundary.
+        Returns the cumulative :class:`AsyncRunLog`."""
+        if num_epochs < 1:
+            raise ValueError(f"num_epochs must be >= 1, got {num_epochs}")
+        return self.run_pushes(num_epochs * self.pushes_per_epoch, batch_fn)
+
+    def run_pushes(self, num_pushes: int,
+                   batch_fn: Callable[[int, int], Any]) -> AsyncRunLog:
+        """Run exactly ``num_pushes`` accepted pushes: a per-worker
+        re-plan on every ``pushes_per_epoch`` boundary, with a final
+        partial epoch for any remainder."""
+        if num_pushes < 1:
+            raise ValueError(f"num_pushes must be >= 1, got {num_pushes}")
+        log: Optional[AsyncRunLog] = None
+        remaining = num_pushes
+        while remaining > 0:
+            chunk = min(remaining, self.pushes_per_epoch)
+            if self._epoch > 0:
+                self._replan(self._epoch)
+            log = self.trainer.run(chunk, batch_fn,
+                                   reset=self._epoch == 0)
+            self._epoch += 1
+            remaining -= chunk
+        return log

@@ -59,6 +59,7 @@ class TransferLedger:
     num_pulls: int = 0
     num_pushes: int = 0
     rejected_pushes: int = 0
+    waited_pushes: int = 0        # SSP wait-throttle: commits that blocked
 
     def record_pull(self, worker: int, nbytes: int) -> None:
         self.pulled_bytes[worker] = self.pulled_bytes.get(worker, 0) + nbytes
@@ -181,6 +182,12 @@ class PSServer:
         floor = self.version - self.staleness_bound
         for v in [v for v in self._snapshots if v < floor]:
             del self._snapshots[v]
+
+    def head_distance(self, version: int) -> int:
+        """Staleness a push computed at ``version`` would have if it
+        committed *now* (the quantity the bounded-staleness gate compares
+        against ``staleness_bound``)."""
+        return self.version - version
 
     # ------------------------------------------------------------------
     # introspection

@@ -20,6 +20,13 @@ scheduler's cost interface: per-worker ``LayerCosts`` whose pt/Δt come
 from the downlink, gt/Δt_bwd from the uplink, and fc/bc from that
 worker's own compute rate — so DynaComm plans *per topology* rather than
 per homogeneous cluster.
+
+``TopologySchedule`` is the time-varying regime: a piecewise-constant
+sequence of topologies indexed by epoch (mirroring
+``core.netmodel.NetworkSchedule``) — an edge fleet whose uplinks degrade,
+whose devices throttle thermally, or whose membership is re-provisioned
+on epoch boundaries.  ``repro.ps.dynamic.DynamicPSTrainer`` re-plans
+against the active topology once per topology epoch.
 """
 
 from __future__ import annotations
@@ -168,3 +175,111 @@ class PSTopology:
             self.worker_costs(w, param_bytes=pb, flops_fwd=ff, flops_bwd=fb,
                               grad_bytes=gb)
             for w in range(self.num_workers)))
+
+
+# ---------------------------------------------------------------------------
+# Time-varying topologies (the dynamic-PS workload)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """Piecewise-constant time-varying :class:`PSTopology`.
+
+    ``knots`` is a sequence of ``(start_epoch, topology)`` pairs with
+    strictly increasing epochs starting at 0 (the ``NetworkSchedule``
+    contract, applied to whole topologies): ``topology_at(e)`` returns the
+    topology of the last knot whose start epoch is <= ``e``, so a shift
+    applies to the boundary epoch itself.  Zero-length epochs (two knots
+    at the same epoch) are rejected.
+
+    Every knot must keep ``num_workers`` fixed — workers map 1:1 onto mesh
+    devices (sync) or event-loop actors (async), neither of which can be
+    re-provisioned mid-run; links, compute rates, and the server-shard
+    count may all drift freely.
+    """
+
+    knots: Tuple[Tuple[int, PSTopology], ...]
+
+    def __post_init__(self):
+        knots = tuple((int(e), t) for e, t in self.knots)
+        object.__setattr__(self, "knots", knots)
+        if not knots:
+            raise ValueError("TopologySchedule needs at least one knot")
+        for e, topo in knots:
+            if not isinstance(topo, PSTopology):
+                raise TypeError(f"knot at epoch {e} is {type(topo).__name__},"
+                                f" not PSTopology")
+        epochs = [e for e, _ in knots]
+        if epochs[0] != 0:
+            raise ValueError(f"first knot must start at epoch 0, got "
+                             f"{epochs[0]}")
+        if any(b <= a for a, b in zip(epochs, epochs[1:])):
+            raise ValueError(f"knot epochs must be strictly increasing, got "
+                             f"{epochs}")
+        workers = {t.num_workers for _, t in knots}
+        if len(workers) != 1:
+            raise ValueError(f"knots disagree on num_workers: "
+                             f"{sorted(workers)} — workers cannot join or "
+                             f"leave mid-run")
+
+    @property
+    def num_knots(self) -> int:
+        return len(self.knots)
+
+    @property
+    def num_workers(self) -> int:
+        return self.knots[0][1].num_workers
+
+    def topology_at(self, epoch: int) -> PSTopology:
+        if epoch < 0:
+            raise ValueError(f"epoch must be >= 0, got {epoch}")
+        active = self.knots[0][1]
+        for start, topo in self.knots:
+            if start > epoch:
+                break
+            active = topo
+        return active
+
+    def shift_epochs(self) -> Tuple[int, ...]:
+        """Epochs at which the active topology changes (knots after the
+        first)."""
+        return tuple(e for e, _ in self.knots[1:])
+
+
+def as_topology_schedule(topo) -> TopologySchedule:
+    """Wrap a static ``PSTopology`` as a one-knot schedule (idempotent)."""
+    if isinstance(topo, TopologySchedule):
+        return topo
+    return TopologySchedule(knots=((0, topo),))
+
+
+def uplink_degradation(base: PSTopology, *, factor: float,
+                       at_epoch: int) -> TopologySchedule:
+    """The canonical drift demo: every worker's uplink bandwidth divided
+    by ``factor`` at ``at_epoch`` (downlinks, RTTs, and compute rates
+    unchanged) — gradient pushes suddenly dominate and the backward
+    decomposition must re-segment."""
+    if at_epoch < 1:
+        raise ValueError(f"at_epoch must be >= 1, got {at_epoch}")
+    if factor <= 0:
+        raise ValueError(f"factor must be positive, got {factor}")
+    degraded = []
+    for w, link in enumerate(base.links):
+        up = link.up
+        # LinkModel's contract is duck-typed (dt + transfer_time); this
+        # helper additionally needs a bandwidth-parameterized uplink
+        for attr in ("bandwidth_bps", "rtt_s", "setup_s"):
+            if not hasattr(up, attr):
+                raise TypeError(
+                    f"worker {w}'s uplink {up!r} has no {attr}; "
+                    f"uplink_degradation needs EdgeNetworkModel-style "
+                    f"uplinks — build the degraded TopologySchedule "
+                    f"explicitly instead")
+        degraded.append(LinkModel(
+            down=link.down,
+            up=EdgeNetworkModel(bandwidth_bps=up.bandwidth_bps / factor,
+                                rtt_s=up.rtt_s, setup_s=up.setup_s)))
+    after = PSTopology(num_servers=base.num_servers, links=tuple(degraded),
+                       worker_flops=base.worker_flops)
+    return TopologySchedule(knots=((0, base), (at_epoch, after)))

@@ -155,10 +155,16 @@ class PSTrainer:
         return self.topology.topology_costs(
             layer_profiles(self.cfg, input_shape))
 
+    def timeline_from_costs(self, costs: TopologyCosts) -> PSTimeline:
+        """Per-worker timeline of one synchronous iteration of *this
+        trainer's* plan under explicit costs (e.g. a topology epoch's
+        projection a caller already holds), skipping the profile
+        re-derivation that :meth:`timeline` performs."""
+        return simulate_ps_iteration(costs, decision_from_plan(self.plan))
+
     def timeline(self, input_shape: InputShape) -> PSTimeline:
         """Per-worker timeline of one synchronous iteration of the plan."""
-        return simulate_ps_iteration(self.topology_costs(input_shape),
-                                     decision_from_plan(self.plan))
+        return self.timeline_from_costs(self.topology_costs(input_shape))
 
     def estimated_step_seconds(self, input_shape: InputShape) -> float:
         return self.timeline(input_shape).makespan

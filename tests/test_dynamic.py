@@ -117,6 +117,191 @@ class TestNetworkScheduleEdgeCases:
         assert sched.model_at(2) is m[1]
 
 
+class TestTopologySchedule:
+    """Time-varying PS topologies: the NetworkSchedule edge-case contract
+    applied to whole fabrics (ISSUE 4 satellite)."""
+
+    def _topos(self, n, workers=2):
+        from repro.ps import PSTopology
+        return [PSTopology.uniform(1, workers, up_bps=(i + 1) * 1e9)
+                for i in range(n)]
+
+    def test_epoch_exactly_on_every_boundary(self):
+        """topology_at at a knot's start epoch returns the *new* topology
+        — the shift applies to the boundary epoch itself, for every
+        knot."""
+        from repro.ps import TopologySchedule
+        t = self._topos(3)
+        sched = TopologySchedule(knots=((0, t[0]), (2, t[1]), (5, t[2])))
+        assert sched.topology_at(0) is t[0]
+        assert sched.topology_at(1) is t[0]
+        assert sched.topology_at(2) is t[1]       # exactly on the boundary
+        assert sched.topology_at(4) is t[1]
+        assert sched.topology_at(5) is t[2]       # exactly on the boundary
+        assert sched.topology_at(10 ** 9) is t[2]
+        assert sched.shift_epochs() == (2, 5)
+
+    def test_zero_length_epochs_rejected(self):
+        """Two knots at the same epoch would make a zero-length epoch."""
+        from repro.ps import TopologySchedule
+        t = self._topos(3)
+        with pytest.raises(ValueError, match="strictly increasing"):
+            TopologySchedule(knots=((0, t[0]), (2, t[1]), (2, t[2])))
+        with pytest.raises(ValueError, match="strictly increasing"):
+            TopologySchedule(knots=((0, t[0]), (3, t[1]), (2, t[2])))
+
+    def test_empty_and_unanchored_rejected(self):
+        from repro.ps import TopologySchedule
+        (t,) = self._topos(1)
+        with pytest.raises(ValueError, match="at least one knot"):
+            TopologySchedule(knots=())
+        with pytest.raises(ValueError, match="epoch 0"):
+            TopologySchedule(knots=((3, t),))
+
+    def test_negative_epoch_rejected(self):
+        from repro.ps import TopologySchedule
+        (t,) = self._topos(1)
+        with pytest.raises(ValueError, match=">= 0"):
+            TopologySchedule(knots=((0, t),)).topology_at(-1)
+
+    def test_worker_count_must_stay_fixed(self):
+        """Workers map onto devices/actors and cannot join or leave."""
+        from repro.ps import TopologySchedule, PSTopology
+        a = PSTopology.uniform(1, 2)
+        b = PSTopology.uniform(1, 3)
+        with pytest.raises(ValueError, match="num_workers"):
+            TopologySchedule(knots=((0, a), (2, b)))
+
+    def test_non_topology_knot_rejected(self):
+        from repro.ps import TopologySchedule
+        with pytest.raises(TypeError, match="not PSTopology"):
+            TopologySchedule(knots=((0, EdgeNetworkModel()),))
+
+    def test_as_topology_schedule_idempotent(self):
+        from repro.ps import PSTopology, as_topology_schedule
+        topo = PSTopology.uniform(2, 2)
+        s = as_topology_schedule(topo)
+        assert s.topology_at(7) is topo
+        assert as_topology_schedule(s) is s
+
+    def test_float_like_epochs_coerced(self):
+        from repro.ps import TopologySchedule
+        t = self._topos(2)
+        sched = TopologySchedule(knots=((0.0, t[0]), (2.0, t[1])))
+        assert sched.knots[1][0] == 2
+        assert sched.topology_at(2) is t[1]
+
+    def test_uplink_degradation_helper(self):
+        from repro.ps import PSTopology, uplink_degradation
+        base = PSTopology.uniform(2, 3, down_bps=10e9, up_bps=4e9)
+        sched = uplink_degradation(base, factor=4, at_epoch=2)
+        assert sched.topology_at(1) is base
+        after = sched.topology_at(2)
+        for before_l, after_l in zip(base.links, after.links):
+            assert after_l.up.bandwidth_bps == \
+                pytest.approx(before_l.up.bandwidth_bps / 4)
+            assert after_l.down is before_l.down       # downlinks untouched
+        assert after.worker_flops == base.worker_flops
+        with pytest.raises(ValueError, match="at_epoch"):
+            uplink_degradation(base, factor=4, at_epoch=0)
+        with pytest.raises(ValueError, match="factor"):
+            uplink_degradation(base, factor=0.0, at_epoch=1)
+
+
+class TestTopologyScheduler:
+    """Epoch-cached consensus / per-worker planning (core plumbing)."""
+
+    def _costs(self):
+        from repro.core import random_costs
+        from repro.core.costmodel import TopologyCosts
+        return TopologyCosts(workers=(
+            random_costs(6, seed=0),
+            random_costs(6, seed=0, comp_scale=5.0, comm_scale=2.0)))
+
+    def test_consensus_mode_caches_until_boundary(self):
+        from repro.core import TopologyScheduler, consensus_decision
+        topo = self._costs()
+        sched = TopologyScheduler(reschedule_every=3)
+        d0 = sched.decision_for_iteration(topo)
+        assert d0 == consensus_decision(topo, "dynacomm")[0]
+        assert sched.last_makespan == pytest.approx(topo.makespan(*d0))
+        t0 = sched.last_scheduling_seconds
+        assert sched.decision_for_iteration(topo) == d0    # cached
+        assert sched.last_scheduling_seconds == t0         # no re-plan
+        sched.decision_for_iteration(topo)                 # iter 3
+        sched.decision_for_iteration(topo)                 # boundary: re-plan
+        assert sched._iter_seen == 4
+
+    def test_per_worker_mode(self):
+        from repro.core import TopologyScheduler, schedule_topology
+        topo = self._costs()
+        sched = TopologyScheduler(mode="per-worker")
+        decisions = sched.decision_for_iteration(topo)
+        assert decisions == schedule_topology(topo, "dynacomm")
+        assert len(decisions) == topo.num_workers
+
+    def test_overhead_hidden_uses_min_idle_window(self):
+        from repro.core import TopologyScheduler
+        topo = self._costs()
+        sched = TopologyScheduler()
+        sched.decision_for_iteration(topo)
+        assert topo.idle_window == \
+            min(c.dt_push + float(c.gt[0]) for c in topo.workers)
+        sched.last_scheduling_seconds = topo.idle_window * 0.5
+        assert sched.scheduling_overhead_hidden(topo)
+        sched.last_scheduling_seconds = topo.idle_window * 2.0
+        assert not sched.scheduling_overhead_hidden(topo)
+
+    def test_validation(self):
+        from repro.core import TopologyScheduler
+        with pytest.raises(ValueError, match="strategy"):
+            TopologyScheduler(strategy="psychic")
+        with pytest.raises(ValueError, match="reschedule_every"):
+            TopologyScheduler(reschedule_every=0)
+        with pytest.raises(ValueError, match="mode"):
+            TopologyScheduler(mode="vote")
+
+
+class TestPSReplanTimeline:
+    def test_stale_plan_penalty(self):
+        """Freezing the epoch-0 plan across a drift can only lose to
+        re-planning (per epoch, the re-plan minimizes over a candidate
+        set containing the frozen plan's per-worker optima)."""
+        from repro.core import (TopologyScheduler, simulate_ps_replan)
+        from repro.core.costmodel import TopologyCosts
+        from repro.core import random_costs
+        base = TopologyCosts(workers=(
+            random_costs(6, seed=1), random_costs(6, seed=2)))
+        epoch_costs = [base, base.scaled(comm=4.0), base.scaled(comm=16.0)]
+        sched = TopologyScheduler(reschedule_every=1)
+        decisions = []
+        for c in epoch_costs:
+            sched.invalidate()
+            decisions.append(sched.decision_for_iteration(c))
+        tl = simulate_ps_replan(epoch_costs, decisions)
+        assert tl.num_epochs == 3
+        assert tl.stale_plan_penalty(0) == pytest.approx(0.0)
+        for e in range(3):
+            # consensus evaluates the frozen decision among its candidates
+            # only at epoch 0; later epochs may not, so only assert the
+            # simulated numbers are consistent, not a universal sign
+            assert tl.makespans[e] == \
+                pytest.approx(tl.replanned[e].makespan)
+            assert tl.frozen_makespans[e] == \
+                pytest.approx(tl.frozen[e].makespan)
+
+    def test_validation(self):
+        from repro.core import simulate_ps_replan, PSReplanTimeline
+        from repro.core.costmodel import TopologyCosts
+        from repro.core import random_costs
+        topo = TopologyCosts(workers=(random_costs(4, seed=0),))
+        d = (((1, 4),), ((4, 1),))
+        with pytest.raises(ValueError, match="epoch costs"):
+            simulate_ps_replan([topo, topo], [d])
+        with pytest.raises(ValueError, match="at least one epoch"):
+            PSReplanTimeline(replanned=(), frozen=())
+
+
 class TestLayerTimingHook:
     def test_medians_drop_warmup(self):
         hook = LayerTimingHook(warmup=1)
@@ -357,18 +542,151 @@ class TestDynamicLoopStateSingleDevice:
         assert dyn.scheduler._iter_seen == 4      # epoch alignment intact
 
 
+class TestDynamicPSTrainerSingleDevice:
+    """The dynamic-PS loop on a 1-device mesh: plan swap exactly on the
+    topology-epoch boundary, compiled-step cache, and sync losses
+    bit-identical to statically running each epoch's plan (the ISSUE 4
+    acceptance criterion; the 4-forged-device version runs in the slow
+    subprocess check)."""
+
+    STEPS_PER_EPOCH = 2
+
+    @pytest.fixture(scope="class")
+    def run(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.data.pipeline import SyntheticText
+        from repro.optim import adamw
+        from repro.ps import (DynamicPSTrainer, PSTopology,
+                              uplink_degradation)
+
+        cfg = get_config("granite-3-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        base = PSTopology.uniform(2, 1, down_bps=10e9, up_bps=10e9,
+                                  flops=1e10)
+        sched = uplink_degradation(base, factor=10, at_epoch=1)
+        shape = InputShape("dyn-ps", 32, 4, "train")
+        pipe = SyntheticText(cfg.vocab_size, 32, 4, seed=0)
+        dyn = DynamicPSTrainer(cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
+                               topology=sched,
+                               steps_per_epoch=self.STEPS_PER_EPOCH,
+                               input_shape=shape)
+        state = dyn.init_state(jax.random.PRNGKey(0))
+        state, losses = dyn.run(state, pipe.batch, 3 * self.STEPS_PER_EPOCH)
+        return dyn, sched, pipe, losses
+
+    def test_plan_swaps_exactly_on_boundary_steps(self, run):
+        dyn, _, _, _ = run
+        assert [e.step for e in dyn.events] == \
+            [i * self.STEPS_PER_EPOCH for i in range(3)]
+        assert not dyn.events[0].plan_changed
+        assert dyn.events[1].plan_changed, \
+            "the 10x uplink degradation must re-segment the push plan"
+        assert dyn.events[1].step == self.STEPS_PER_EPOCH
+        # the degraded uplink wants fewer, larger pushes... or at least a
+        # different decomposition; sanity: backward segmentation moved
+        assert dyn.events[1].plan.backward != dyn.events[0].plan.backward
+
+    def test_one_trace_per_distinct_plan(self, run):
+        dyn, _, _, _ = run
+        assert dyn.traces == len(dyn.plans_seen) == 2
+        assert not dyn.events[2].retraced          # epoch 2 keeps the plan
+        for plan in dyn.plans_seen:
+            ag, rs = dyn.hlo_counts(plan)
+            assert (ag, rs) == (len(plan.forward), len(plan.backward))
+
+    def test_losses_bit_identical_to_static_plan_sequence(self, run):
+        import jax
+        from repro.core import consensus_decision
+        from repro.models.profiles import layer_profiles
+        from repro.models import num_sched_layers
+        from repro.core import plan_from_decision
+        from repro.optim import adamw
+        from repro.ps import PSTrainer
+
+        dyn, sched, pipe, losses = run
+        cfg = get_config("granite-3-2b").reduced()
+        shape = InputShape("dyn-ps", 32, 4, "train")
+        profs = layer_profiles(cfg, shape)
+        base = PSTrainer(cfg=cfg, mesh=dyn.mesh, plan=dyn.plans_seen[0],
+                         optimizer=adamw(1e-3),
+                         topology=sched.topology_at(0))
+        state = base.init_state(jax.random.PRNGKey(0))
+        ref, fns = [], {}
+        for epoch in range(3):
+            costs = sched.topology_at(epoch).topology_costs(profs)
+            d, _ = consensus_decision(costs, "dynacomm")
+            plan = plan_from_decision(*d, num_sched_layers(cfg))
+            if plan not in fns:
+                fns[plan] = jax.jit(base.with_plan(plan).build_train_step())
+            for i in range(epoch * self.STEPS_PER_EPOCH,
+                           (epoch + 1) * self.STEPS_PER_EPOCH):
+                state, loss = fns[plan](state, pipe.batch(i))
+                ref.append(float(loss))
+        assert losses == ref
+
+    def test_overhead_hidden_against_topology_window(self, run):
+        """`overhead_hidden` must be exactly the Table I predicate
+        against the topology's min Δt + gt¹ window.  (Asserting the flag
+        is *True* would be a wall-clock assertion — flaky under CPU
+        contention — so the quick suite pins the relationship; the slow
+        subprocess check asserts truth on an otherwise-idle run.)"""
+        dyn, _, _, _ = run
+        for e in dyn.events:
+            window = dyn.costs_for_epoch(e.epoch).idle_window
+            assert e.overhead_hidden == (e.scheduling_seconds <= window)
+            assert e.scheduling_seconds >= 0
+
+    def test_timeline_and_replan_views(self, run):
+        """The driver's simulator views: per-epoch timelines of the
+        active plan, and the re-planned-vs-frozen stale-plan penalty."""
+        dyn, _, _, _ = run
+        tl = dyn.timeline()
+        assert tl.num_workers == 1
+        assert tl.makespan > 0
+        rp = dyn.replan_timeline()
+        assert rp.num_epochs == 3
+        assert rp.stale_plan_penalty(0) == pytest.approx(0.0)
+        # under the degraded uplink the re-planned decomposition must be
+        # at least as good as freezing the epoch-0 plan
+        for e in range(1, 3):
+            assert rp.makespans[e] <= rp.frozen_makespans[e] + 1e-12
+
+    def test_constructor_validation(self):
+        import jax
+        from jax.sharding import Mesh
+        from repro.optim import adamw
+        from repro.ps import DynamicPSTrainer, PSTopology
+        cfg = get_config("granite-3-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        with pytest.raises(ValueError, match="steps_per_epoch"):
+            DynamicPSTrainer(cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
+                             topology=PSTopology.uniform(1, 1),
+                             steps_per_epoch=0,
+                             input_shape=InputShape("x", 32, 4, "train"))
+        with pytest.raises(ValueError, match="workers"):
+            # 4-worker schedule on a 1-device mesh
+            DynamicPSTrainer(cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
+                             topology=PSTopology.uniform(1, 4),
+                             steps_per_epoch=2,
+                             input_shape=InputShape("x", 32, 4, "train"))
+
+
+def _run_helper(name):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "helpers", name)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 @pytest.mark.slow
 class TestDynamicTrainerMultiDevice:
     @pytest.fixture(scope="class")
     def result(self):
-        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-        env.pop("XLA_FLAGS", None)
-        proc = subprocess.run(
-            [sys.executable, os.path.join(REPO, "tests", "helpers",
-                                          "dynamic_trainer_check.py")],
-            capture_output=True, text=True, env=env, timeout=1200)
-        assert proc.returncode == 0, proc.stderr[-3000:]
-        return json.loads(proc.stdout.strip().splitlines()[-1])
+        return _run_helper("dynamic_trainer_check.py")
 
     def test_plan_changes_on_bandwidth_drop(self, result):
         ev = result["events"]
@@ -403,3 +721,42 @@ class TestDynamicTrainerMultiDevice:
         # steady-state re-schedules only.
         for e in result["events"][1:]:
             assert e["hidden"], "DP must fit in the Δt + gt¹ idle window"
+
+
+@pytest.mark.slow
+class TestDynamicPSTrainerMultiDevice:
+    """4-forged-device dynamic-PS run: degrade-then-recover uplinks, plan
+    swap + cache revisit + bit-identity vs the static plan sequence (the
+    ISSUE 4 acceptance criterion at deployment scale)."""
+
+    @pytest.fixture(scope="class")
+    def result(self):
+        return _run_helper("dynamic_ps_check.py")
+
+    def test_plan_changes_on_uplink_degradation_and_recovers(self, result):
+        ev = result["events"]
+        assert len(ev) == 3
+        assert [e["step"] for e in ev] == [0, 3, 6]
+        assert not ev[0]["changed"]
+        assert ev[1]["changed"], \
+            "10x slower uplinks must re-segment the consensus plan"
+        assert ev[2]["changed"]                   # recovery swaps back
+        assert (ev[2]["fwd"], ev[2]["bwd"]) == (ev[0]["fwd"], ev[0]["bwd"])
+
+    def test_revisited_plan_hits_step_cache(self, result):
+        assert result["traces"] == len(result["plans"]) == 2
+        assert result["cache_hits"] == 1
+        assert not result["events"][2]["retraced"]
+
+    def test_hlo_one_pull_one_push_per_segment(self, result):
+        for p in result["plans"]:
+            assert p["ag"] == p["fwd"], p
+            assert p["rs"] == p["bwd"], p
+
+    def test_losses_bit_identical_to_static_sequence(self, result):
+        assert result["losses_dyn"] == result["losses_static"]
+
+    def test_scheduling_overhead_hidden(self, result):
+        for e in result["events"][1:]:
+            assert e["hidden"], \
+                "DP must fit the topology's min Δt + gt¹ idle window"

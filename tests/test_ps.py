@@ -351,17 +351,26 @@ def _fixed_batch(*_):
             "labels": jnp.asarray(r.integers(0, 10, size=(8,)), jnp.int32)}
 
 
-def _async_trainer(k, workers=3, flops=None, optimizer=None):
+def _async_trainer(k, workers=3, flops=None, optimizer=None,
+                   throttle="reject", plan=None):
     params = small_cnn_init(jax.random.PRNGKey(0))
     L = len(params["layers"])
-    plan = plan_from_decision(((1, 3), (4, L)), ((4, L), (1, 3)), L)
+    if plan is None:
+        plan = plan_from_decision(((1, 3), (4, L)), ((4, L), (1, 3)), L)
     topo = PSTopology(
         num_servers=2,
         links=tuple(asymmetric_link(10e9, 1e9) for _ in range(workers)),
         worker_flops=flops or (1e10,) * workers)
     return AsyncPSTrainer(init_layers=params["layers"], loss_fn=_cnn_loss,
                           optimizer=optimizer or sgd(0.05), topology=topo,
-                          plan=plan, staleness=k)
+                          plan=plan, staleness=k, throttle=throttle)
+
+
+def _slow_worker_trainer(k, throttle):
+    """The starvation fixture: 4 workers, worker 3 at 1/4 compute rate
+    (iteration durations 1, 1, 1, 4 simulated seconds)."""
+    return _async_trainer(k, workers=4, flops=(4e10, 4e10, 4e10, 1e10),
+                          throttle=throttle)
 
 
 class TestAsyncBoundedStaleness:
@@ -423,6 +432,220 @@ class TestAsyncBoundedStaleness:
             AsyncPSTrainer(init_layers=params["layers"], loss_fn=_cnn_loss,
                            optimizer=sgd(0.05), topology=topo, plan=partial,
                            staleness=1)
+
+
+# ---------------------------------------------------------------------------
+# SSP wait-at-barrier throttling (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+
+class TestSSPThrottle:
+    def test_reject_starves_slow_worker(self):
+        """The documented ROADMAP failure mode: at k=1, a 4x-slower worker
+        always commits > k versions behind the head the fast workers keep
+        advancing — every one of its pushes is evicted, it NEVER
+        contributes a gradient."""
+        log = _slow_worker_trainer(1, "reject").run(16, _fixed_batch)
+        assert log.accepted_by_worker().get(3, 0) == 0
+        assert log.num_rejected > 0
+        # its attempts were real: rejections from worker 3 are on record
+        assert any(e.worker == 3 and not e.result.accepted
+                   for e in log.events)
+
+    def test_wait_lets_every_worker_contribute(self):
+        """Same fleet, wait throttle: fast workers block at the barrier
+        instead; the slow worker lands >= 1 accepted push, nothing is
+        ever rejected, and the staleness bound still holds."""
+        log = _slow_worker_trainer(1, "wait").run(16, _fixed_batch)
+        by_worker = log.accepted_by_worker()
+        for w in range(4):
+            assert by_worker.get(w, 0) >= 1, f"worker {w} starved"
+        assert log.num_rejected == 0
+        assert log.max_staleness <= 1
+        assert log.total_wait_s > 0        # somebody actually waited
+
+    @pytest.mark.parametrize("k", [0, 1, 2])
+    def test_wait_never_violates_bound(self, k):
+        log = _slow_worker_trainer(k, "wait").run(12, _fixed_batch)
+        assert log.max_staleness <= k
+        assert log.num_rejected == 0
+        assert len(log.accepted) == 12
+
+    def test_wait_k0_serializes_without_recompute(self):
+        """k=0 under wait is sequential SGD like reject mode, but via
+        blocking: no rejections, no wasted recomputation."""
+        log = _async_trainer(0, workers=2, throttle="wait").run(
+            8, _fixed_batch)
+        assert all(e.result.staleness == 0 for e in log.accepted)
+        assert log.num_rejected == 0
+
+    def test_wait_commits_in_version_order_within_window(self):
+        """SSP's invariant, machine-checked: at every accepted commit the
+        gradient's compute version is within k of the *post-commit* head
+        (PushResult.version), monotone head growth, one bump per commit."""
+        log = _slow_worker_trainer(1, "wait").run(16, _fixed_batch)
+        heads = [e.result.version for e in log.events]
+        assert heads == list(range(1, len(log.events) + 1))
+        for e in log.events:
+            assert e.result.version - e.version <= 1 + 1  # head bump + k
+
+    def test_throttle_validation(self):
+        with pytest.raises(ValueError, match="throttle"):
+            _async_trainer(1, throttle="drop")
+
+    def test_run_resumes_without_reset(self):
+        """run(reset=False) continues the same event loop: cumulative log,
+        advancing simulated clock, no re-priming of batches."""
+        tr = _slow_worker_trainer(1, "wait")
+        first = tr.run(6, _fixed_batch)
+        t1 = first.makespan
+        second = tr.run(6, _fixed_batch, reset=False)
+        assert second is first                    # one cumulative log
+        assert len(second.accepted) == 12
+        assert second.makespan > t1               # the clock kept going
+
+    def test_resume_drains_barrier_entries_left_by_push_target(self):
+        """A run whose push target is reached while another completed
+        worker stands *eligible* at the barrier must not defer that
+        commit to the next queue completion on resume: it commits at the
+        clock it became eligible, with the SSP wait it actually paid.
+
+        2 workers with durations (1, 4), k=1: worker 0 commits at t=1,
+        blocks at the barrier from t=2 on its second push; worker 1
+        commits at t=4 (target of 2 reached), which is exactly when
+        worker 0's entry becomes eligible."""
+        tr = _async_trainer(1, workers=2, flops=(4e10, 1e10),
+                            throttle="wait")
+        first = tr.run(2, _fixed_batch)
+        assert [e.sim_time for e in first.events] == [1.0, 4.0]
+        log = tr.run(1, _fixed_batch, reset=False)
+        e = log.events[-1]
+        assert e.worker == 0
+        assert e.sim_time == 4.0            # not worker 1's next finish (8)
+        assert e.wait_s == pytest.approx(2.0)   # blocked t=2..4, no more
+        assert e.result.accepted and e.result.staleness <= 1
+
+
+class TestAsyncDeterminism:
+    """Two runs with the same seed/topology must be bit-identical — the
+    whole event sequence, not just the losses (ISSUE 4 satellite)."""
+
+    @staticmethod
+    def _trace(log):
+        return [(e.worker, e.sim_time, e.version, e.result.accepted,
+                 e.result.staleness, e.result.version, e.loss, e.retries,
+                 e.wait_s) for e in log.events]
+
+    @pytest.mark.parametrize("throttle", ["reject", "wait"])
+    def test_bit_identical_runs(self, throttle):
+        a = _slow_worker_trainer(1, throttle).run(12, _fixed_batch)
+        b = _slow_worker_trainer(1, throttle).run(12, _fixed_batch)
+        assert self._trace(a) == self._trace(b)
+        assert a.losses == b.losses
+
+
+class TestPerWorkerPlans:
+    """Asynchronous planning mode: each worker runs its own decomposition
+    (``schedule_topology``), which the server's per-(worker, version)
+    accumulation supports without changes."""
+
+    def _plans(self):
+        params = small_cnn_init(jax.random.PRNGKey(0))
+        L = len(params["layers"])
+        coarse = plan_from_decision(((1, L),), ((1, L),), L)
+        fine = plan_from_decision(((1, 3), (4, L)), ((4, L), (1, 3)), L)
+        return L, coarse, fine
+
+    def test_distinct_plans_run_and_respect_bound(self):
+        _, coarse, fine = self._plans()
+        tr = _async_trainer(1, workers=3, plan=[coarse, fine, fine])
+        log = tr.run(9, _fixed_batch)
+        assert log.max_staleness <= 1
+        assert tr.plans == (coarse, fine, fine)
+        with pytest.raises(ValueError, match="per-worker"):
+            tr.plan                     # no single shared plan to return
+
+    def test_plan_count_must_match_workers(self):
+        _, coarse, fine = self._plans()
+        with pytest.raises(ValueError, match="plans for 3"):
+            _async_trainer(1, workers=3, plan=[coarse, fine])
+
+    def test_set_plans_swaps_between_runs(self):
+        _, coarse, fine = self._plans()
+        tr = _async_trainer(1, workers=3, plan=coarse)
+        tr.run(3, _fixed_batch)
+        tr.set_plans(fine)
+        log = tr.run(3, _fixed_batch, reset=False)
+        assert tr.plan == fine
+        assert len(log.accepted) == 6
+
+
+class TestDynamicAsyncPS:
+    """Per-worker re-planning across topology epochs (the dynamic-PS
+    combination, async side)."""
+
+    def _schedule(self, factor=8.0):
+        from repro.ps import uplink_degradation
+        base = PSTopology(
+            num_servers=2,
+            links=tuple(asymmetric_link(1e9, 100e6) for _ in range(3)),
+            worker_flops=(1e9, 1e9, 2.5e8))
+        return uplink_degradation(base, factor=factor, at_epoch=1)
+
+    def _driver(self, throttle="wait"):
+        from repro.ps import DynamicAsyncPSTrainer
+        from repro.ps.dynamic import profiles_from_specs
+        from repro.dist.collectives import make_flat_spec
+        params = small_cnn_init(jax.random.PRNGKey(0))
+        specs = [make_flat_spec(t, 1) for t in params["layers"]]
+        return DynamicAsyncPSTrainer(
+            init_layers=params["layers"], loss_fn=_cnn_loss,
+            optimizer=sgd(0.05), topology=self._schedule(),
+            pushes_per_epoch=6, staleness=1, throttle=throttle,
+            profiles=profiles_from_specs(specs, flops_per_param=1000.0))
+
+    def test_replans_on_epoch_boundaries(self):
+        dyn = self._driver()
+        log = dyn.run(3, _fixed_batch)
+        assert dyn.epoch == 3
+        assert len(log.accepted) == 18            # cumulative across epochs
+        assert [e.epoch for e in dyn.events] == [0, 1, 2]
+        assert [e.at_push for e in dyn.events] == [0, 6, 12]
+        # the uplink degradation at epoch 1 re-segments the plans...
+        assert dyn.events[1].plan_changed
+        # ...and the heterogeneous fleet genuinely plans per worker
+        assert len(set(dyn.events[0].worker_plans)) > 1
+        assert log.max_staleness <= 1
+
+    def test_wait_throttle_carries_across_replans(self):
+        dyn = self._driver(throttle="wait")
+        log = dyn.run(2, _fixed_batch)
+        assert log.num_rejected == 0
+        by_worker = log.accepted_by_worker()
+        for w in range(3):
+            assert by_worker.get(w, 0) >= 1
+
+    def test_run_pushes_exact_total_with_partial_epoch(self):
+        """run_pushes honours the exact requested total: whole epochs of
+        pushes_per_epoch with a re-plan on each boundary, then a partial
+        final epoch for the remainder."""
+        dyn = self._driver()
+        log = dyn.run_pushes(14, _fixed_batch)     # 6 + 6 + 2
+        assert len(log.accepted) == 14
+        assert [e.epoch for e in dyn.events] == [0, 1, 2]
+        assert [e.at_push for e in dyn.events] == [0, 6, 12]
+        assert log.max_staleness <= 1
+
+    def test_validation(self):
+        from repro.ps import DynamicAsyncPSTrainer
+        params = small_cnn_init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="pushes_per_epoch"):
+            DynamicAsyncPSTrainer(
+                init_layers=params["layers"], loss_fn=_cnn_loss,
+                optimizer=sgd(0.05), topology=self._schedule(),
+                pushes_per_epoch=0)
+        with pytest.raises(ValueError, match="num_pushes"):
+            self._driver().run_pushes(0, _fixed_batch)
 
 
 # ---------------------------------------------------------------------------
