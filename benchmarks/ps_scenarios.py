@@ -116,20 +116,27 @@ def ps_staleness() -> List[Dict]:
 
     rows = []
     pushes = 24
-    for throttle in ("reject", "wait"):
-        for k in (0, 1, 2, 4):
+    # ("wait", True) is the BSP aggregation mode: same-version pushes
+    # commit as one mean-gradient step.  Under aggregation every worker
+    # is admitted in full-fleet cohorts at the head version, so k is
+    # inert — one k=0 row, not a fake sweep.
+    for throttle, aggregate in (("reject", False), ("wait", False),
+                                ("wait", True)):
+        for k in ((0,) if aggregate else (0, 1, 2, 4)):
             tr = AsyncPSTrainer(init_layers=params["layers"],
                                 loss_fn=loss_fn, optimizer=sgd(0.02),
                                 topology=topo, plan=plan, staleness=k,
-                                throttle=throttle)
+                                throttle=throttle, aggregate=aggregate)
             log = tr.run(pushes, batch_fn)
             slow_accepted = log.accepted_by_worker().get(2, 0)
             rows.append({
-                "throttle": throttle,
+                "throttle": f"{throttle}+agg" if aggregate else throttle,
                 "staleness_k": k, "accepted": len(log.accepted),
                 "rejected": log.num_rejected,
                 "slow_worker_accepted": slow_accepted,
                 "max_staleness": log.max_staleness,
+                "optimizer_steps": max(e.result.version
+                                       for e in log.accepted),
                 "barrier_wait_s": round(log.total_wait_s, 4),
                 "sim_makespan_s": round(log.makespan, 4),
                 "sim_s_per_push": round(log.makespan / pushes, 4),
@@ -181,8 +188,40 @@ def dynamic_ps_drift() -> List[Dict]:
     return rows
 
 
+def runtime_matrix() -> List[Dict]:
+    """Every registered runtime, built from its checked-in smoke config
+    through ``repro.runtime.build_runtime`` and driven for a few units —
+    the registry-as-benchmark view: adding a regime is one config file,
+    and this bench (plus CI's smoke step) picks it up with zero wiring."""
+    import glob
+    import os
+
+    from repro.runtime import RuntimeConfig, build_runtime
+
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = []
+    for path in sorted(glob.glob(
+            os.path.join(here, "examples", "runtime_configs", "*.json"))):
+        config = RuntimeConfig.load(path)
+        rt = build_runtime(config)
+        losses = rt.fit(4)
+        led = rt.ledger
+        rows.append({
+            "runtime": config.runtime,
+            "regime": config.regime,
+            "units": len(losses),
+            "first_loss": round(losses[0], 4),
+            "final_loss": round(losses[-1], 4),
+            "reschedules": len(rt.events),
+            "pull_mb": round(led["pull_bytes"] / 1e6, 2),
+            "push_mb": round(led["push_bytes"] / 1e6, 2),
+        })
+    return rows
+
+
 PS_BENCHES = {
     "ps_topology": ps_topology,
     "ps_staleness": ps_staleness,
     "dynamic_ps_drift": dynamic_ps_drift,
+    "runtime_matrix": runtime_matrix,
 }

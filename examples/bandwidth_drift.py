@@ -4,11 +4,13 @@ The run-time loop of the paper (Section IV-C), end to end: a ~100M-param
 model trains under the DynaComm-bucketed ZeRO trainer while the edge
 uplink degrades from 10 Gbps to 1 Gbps at ``--shift-epoch``.  On the epoch
 boundary the profiler re-derives pt/gt/Δt from the new network condition,
-the DP re-plans, and ``DynamicTrainer`` swaps in the compiled step for the
-new bucket plan (cached by plan, so a later recovery to 10 Gbps swaps back
-without re-tracing).  The ASCII timelines show *why* the decision moves:
-cheaper transmission favours more, smaller segments overlapped with
-compute; an expensive link amortizes Δt over fewer, larger ones.
+the DP re-plans, and the dynamic runtime swaps in the compiled step for
+the new bucket plan (cached by plan, so a later recovery to 10 Gbps swaps
+back without re-tracing).  The whole regime — drifting network included —
+is one ``RuntimeConfig`` literal built through ``build_runtime``; the
+ASCII timelines show *why* the decision moves: cheaper transmission
+favours more, smaller segments overlapped with compute; an expensive link
+amortizes Δt over fewer, larger ones.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/bandwidth_drift.py --steps 60
@@ -18,15 +20,11 @@ import argparse
 import dataclasses
 
 import jax
-import numpy as np
-from jax.sharding import Mesh
 
 from repro.configs import get_config
-from repro.core import bandwidth_shift
 from repro.core.viz import render_timeline
-from repro.data.pipeline import SyntheticText
-from repro.dist.dynamic import DynamicTrainer
-from repro.optim import adamw
+from repro.runtime import (MeasureConfig, NetworkConfig, RuntimeConfig,
+                           ScheduleConfig, build_runtime)
 
 
 def main():
@@ -49,23 +47,32 @@ def main():
                                       d_model=args.d_model, vocab=8192),
         name=f"{args.arch}-drift-demo")
     n_dev = len(jax.devices())
-    mesh = Mesh(np.array(jax.devices()).reshape(n_dev,), ("data",))
-    net = bandwidth_shift(args.bw_gbps * 1e9, args.shift_gbps * 1e9,
-                          at_epoch=args.shift_epoch)
     print(f"devices: {n_dev}  arch: {cfg.name}  layers: {cfg.num_layers}  "
           f"uplink: {args.bw_gbps:g} Gbps → {args.shift_gbps:g} Gbps at "
           f"epoch {args.shift_epoch}")
 
-    dyn = DynamicTrainer(cfg=cfg, mesh=mesh, optimizer=adamw(3e-4),
-                         network=net, steps_per_epoch=args.steps_per_epoch,
-                         compute_flops_per_s=args.worker_flops)
-    state = dyn.init_state(jax.random.PRNGKey(0))
-    pipe = SyntheticText(cfg.vocab_size, args.seq, args.batch, seed=0)
-    state, _ = dyn.run(state, pipe.batch, args.steps, log_every=10)
+    config = RuntimeConfig(
+        runtime="dynamic", arch=cfg.name, batch=args.batch, seq=args.seq,
+        schedule=ScheduleConfig(
+            reschedule_every=args.steps_per_epoch,
+            network=NetworkConfig(bandwidth_gbps=args.bw_gbps,
+                                  shift_gbps=args.shift_gbps,
+                                  shift_epoch=args.shift_epoch)),
+        measure=MeasureConfig(compute_flops_per_s=args.worker_flops))
+    rt = build_runtime(config, model=cfg)
 
+    done = 0
+    while done < args.steps:
+        losses = rt.fit(min(10, args.steps - done))
+        done += len(losses)
+        print(f"step {done:4d}  epoch {rt.trainer.epoch}  "
+              f"loss {losses[-1]:.4f}  buckets "
+              f"{len(rt.plan.forward)}/{len(rt.plan.backward)}")
+
+    dyn, net = rt.trainer, rt.trainer.network
     print("\nre-scheduling history:")
     shown = set()
-    for e in dyn.events:
+    for e in rt.events:
         ag, rs = dyn.hlo_counts(e.plan)
         print(f"  epoch {e.epoch:3d}: {len(e.plan.forward)} pull / "
               f"{len(e.plan.backward)} push buckets (hlo {ag} ag / {rs} rs)  "
@@ -75,7 +82,7 @@ def main():
               f"hidden={e.overhead_hidden}")
         if e.plan not in shown:
             shown.add(e.plan)
-            costs = dyn.costs_for_epoch(e.epoch, state, pipe.batch(e.step))
+            costs = dyn.costs_for_epoch(e.epoch, None, None)
             # forward buckets back to the paper's 1-indexed segments
             segments = tuple((b[0] + 1, b[-1] + 1) for b in e.plan.forward)
             bw = net.model_at(e.epoch).bandwidth_bps / 1e9
@@ -84,7 +91,7 @@ def main():
                                         phase="forward").splitlines():
                 print(f"  {line}")
 
-    changed = any(e.plan_changed for e in dyn.events)
+    changed = any(e.plan_changed for e in rt.events)
     print(f"\nplans traced: {dyn.traces}  cache hits: {dyn.cache_hits}")
     print("schedule re-segmented under drift" if changed
           else "WARNING: decision did not change — try --worker-flops 1e9")

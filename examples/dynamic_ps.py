@@ -1,19 +1,23 @@
 """Dynamic parameter-server demo: re-planning over a drifting topology,
-and SSP wait-at-barrier vs stale-push rejection.
+SSP wait-at-barrier vs stale-push rejection, and BSP push aggregation.
 
-Two acts:
+Three acts:
 
 1. **run-time re-planning** — every worker's uplink degrades mid-training
-   (``--up-factor``× slower at ``--shift-epoch``).  `DynamicPSTrainer`
+   (``--up-factor``× slower at ``--shift-epoch``).  The ``dynamic-ps``
+   runtime — one ``RuntimeConfig`` literal through ``build_runtime`` —
    re-projects the topology's costs on each epoch boundary, re-runs the
    straggler-minimizing consensus decision, and swaps the compiled
-   pull/push step from its plan-keyed AOT cache — watch the push
-   segmentation change while the loss trajectory stays seamless;
+   pull/push step from its plan-keyed AOT cache;
 2. **SSP throttling** — a 4x-slower edge worker at staleness k=1: the
    `reject` throttle starves it (every push arrives > k versions stale
    and is evicted), the `wait` throttle blocks the fast workers at the
    barrier instead, so the slow worker contributes every cycle and the
-   staleness bound still holds.
+   staleness bound still holds;
+3. **BSP aggregation** — `wait` + `aggregate` at k=0: same-version
+   pushes commit as ONE mean-gradient optimizer step, so the round is
+   true bulk-synchronous data parallelism (one version bump per round of
+   W pushes) instead of W serialized commits.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/dynamic_ps.py
@@ -24,15 +28,12 @@ import argparse
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
-from repro.configs import get_config
-from repro.configs.base import InputShape
-from repro.data.pipeline import SyntheticText
 from repro.models.cnn import small_cnn_init, small_cnn_loss
-from repro.optim import adamw, sgd
-from repro.ps import (AsyncPSTrainer, DynamicPSTrainer, PSTopology,
-                      asymmetric_link, uplink_degradation)
+from repro.optim import sgd
+from repro.ps import AsyncPSTrainer, PSTopology, asymmetric_link
+from repro.runtime import (RuntimeConfig, ScheduleConfig, TopologyConfig,
+                           build_runtime)
 
 
 def main():
@@ -49,40 +50,42 @@ def main():
     ap.add_argument("--async-pushes", type=int, default=16)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    devs = jax.devices()
-    mesh = Mesh(np.array(devs).reshape(len(devs),), ("data",))
-    shape = InputShape("dynamic-ps", args.seq, args.batch, "train")
-
     # --- 1. re-planning across an uplink degradation -------------------
-    base = PSTopology.uniform(args.servers, len(devs), down_bps=10e9,
-                              up_bps=10e9, flops=1e10)
-    sched = uplink_degradation(base, factor=args.up_factor,
-                               at_epoch=args.shift_epoch)
-    print(f"topology: {args.servers} shards x {len(devs)} workers; every "
+    n_dev = len(jax.devices())
+    config = RuntimeConfig(
+        runtime="dynamic-ps", arch=args.arch, batch=args.batch,
+        seq=args.seq, optimizer="adamw", lr=1e-3,
+        schedule=ScheduleConfig(
+            reschedule_every=args.steps_per_epoch,
+            topology=TopologyConfig(
+                servers=args.servers, down_gbps=10.0, up_gbps=10.0,
+                worker_flops=1e10, up_shift_factor=args.up_factor,
+                shift_epoch=args.shift_epoch)))
+    print(f"topology: {args.servers} shards x {n_dev} workers; every "
           f"uplink {args.up_factor:g}x slower from epoch "
           f"{args.shift_epoch}")
-    dyn = DynamicPSTrainer(cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
-                           topology=sched,
-                           steps_per_epoch=args.steps_per_epoch,
-                           input_shape=shape)
-    pipe = SyntheticText(cfg.vocab_size, args.seq, args.batch, seed=0)
-    state = dyn.init_state(jax.random.PRNGKey(0))
-    state, _ = dyn.run(state, pipe.batch, args.steps, log_every=4)
-    for e in dyn.events:
-        ag, rs = dyn.hlo_counts(e.plan)
+    rt = build_runtime(config)
+    done = 0
+    while done < args.steps:
+        losses = rt.fit(min(4, args.steps - done))
+        done += len(losses)
+        print(f"  step {done:4d}  epoch {rt.trainer.epoch}  "
+              f"loss {losses[-1]:.4f}")
+    for e in rt.events:
+        ag, rs = rt.trainer.hlo_counts(e.plan)
         print(f"  epoch {e.epoch}: {len(e.plan.forward)} pull / "
               f"{len(e.plan.backward)} push segments (hlo {ag} ag/{rs} rs) "
               f"{'re-segmented' if e.plan_changed else 'unchanged'}, "
               f"sched {e.scheduling_seconds * 1e3:.2f} ms, "
               f"hidden={e.overhead_hidden}")
-    print(f"  traces {dyn.traces} (one per distinct plan), cache hits "
-          f"{dyn.cache_hits}\n")
+    print(f"  traces {rt.trainer.traces} (one per distinct plan), cache "
+          f"hits {rt.trainer.cache_hits}\n")
 
-    # --- 2. SSP wait-at-barrier vs rejection on the smoke CNN ----------
+    # --- 2+3. throttles on the smoke CNN (library API: the factory is
+    # arch-scoped; the CNN demos drive AsyncPSTrainer directly) ---------
+    from repro.core import plan_from_decision
     params = small_cnn_init(jax.random.PRNGKey(0))
     L = len(params["layers"])
-    from repro.core import plan_from_decision
     cnn_plan = plan_from_decision(((1, 3), (4, L)), ((4, L), (1, 3)), L)
     topo = PSTopology(
         num_servers=args.servers,
@@ -117,6 +120,21 @@ def main():
     print("  -> `wait` blocks fast workers at the SSP barrier instead of "
           "evicting the slow worker's pushes: everyone contributes and "
           "the bound still holds")
+
+    print("\nBSP aggregation (wait + aggregate, k=0): same-version pushes "
+          "commit as one mean-gradient step")
+    tr = AsyncPSTrainer(init_layers=params["layers"], loss_fn=loss_fn,
+                        optimizer=sgd(0.05, 0.9), topology=topo,
+                        plan=cnn_plan, staleness=0, throttle="wait",
+                        aggregate=True)
+    log = tr.run(args.async_pushes, batch_fn)
+    heads = [e.result.version for e in log.events]
+    rounds = len(set(heads))
+    by_worker = {w: log.accepted_by_worker().get(w, 0)
+                 for w in range(topo.num_workers)}
+    print(f"  {len(log.accepted)} pushes in {rounds} BSP rounds "
+          f"(one version bump per round of {topo.num_workers}), accepted "
+          f"per worker {by_worker}, max staleness {log.max_staleness}")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,11 @@ links (edge uplinks are 5-20x slower than downlinks) — trains against
 1. **per-topology scheduling** — DynaComm plans per *worker* (each has
    its own fc/bc and pt/gt/Δt); the per-worker optimal decompositions
    differ, and the sync consensus plan minimizes the straggler makespan;
-2. **sync mode** — `PSTrainer` executes the consensus plan with one pull
-   + one push transmission per segment (bit-identical losses to the ZeRO
-   trainer); per-worker timelines show who gates the barrier;
+2. **sync mode** — the ``ps`` runtime, built from one ``RuntimeConfig``
+   whose ``TopologyConfig`` carries the per-worker link/compute lists
+   (heterogeneity is config data, not wiring code), executes the
+   consensus plan with one pull + one push transmission per segment;
+   per-worker timelines show who gates the barrier;
 3. **async mode** — `AsyncPSTrainer` drops the barrier: bounded
    staleness k lets fast workers run ahead up to k versions, the server
    rejects anything staler, and the smoke CNN still converges.
@@ -23,31 +25,30 @@ import argparse
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.core import (consensus_decision, decision_from_plan,
                         plan_from_decision, schedule_topology)
 from repro.core.viz import render_ps_timeline
-from repro.data.pipeline import SyntheticText
 from repro.models.cnn import small_cnn_init, small_cnn_loss
 from repro.models.profiles import layer_profiles
-from repro.optim import adamw, sgd
-from repro.ps import AsyncPSTrainer, PSTopology, PSTrainer, asymmetric_link
+from repro.optim import sgd
+from repro.ps import AsyncPSTrainer
+from repro.runtime import (RuntimeConfig, ScheduleConfig, TopologyConfig,
+                           build_runtime)
 
 
-def heterogeneous_topology(num_servers: int, num_workers: int,
-                           base_flops: float) -> PSTopology:
-    """Half fast workers on good links, half slow ones on degraded links."""
-    links, flops = [], []
+def heterogeneous_fleet(num_workers: int, base_flops: float):
+    """Half fast workers on good links, half slow ones on degraded links,
+    as per-worker config lists (down Gbps, up Gbps, FLOP/s)."""
+    down, up, flops = [], [], []
     for w in range(num_workers):
         slow = w >= num_workers // 2
-        links.append(asymmetric_link(down_bps=(2.5e9 if slow else 10e9),
-                                     up_bps=(0.25e9 if slow else 1e9)))
+        down.append(2.5 if slow else 10.0)
+        up.append(0.25 if slow else 1.0)
         flops.append(base_flops / 4 if slow else base_flops)
-    return PSTopology(num_servers=num_servers, links=tuple(links),
-                      worker_flops=tuple(flops))
+    return tuple(down), tuple(up), tuple(flops)
 
 
 def main():
@@ -62,16 +63,21 @@ def main():
     ap.add_argument("--async-pushes", type=int, default=30)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    devs = jax.devices()
-    mesh = Mesh(np.array(devs).reshape(len(devs),), ("data",))
-    topo = heterogeneous_topology(args.servers, len(devs), args.worker_flops)
-    shape = InputShape("edge-ps", args.seq, args.batch, "train")
-    print(f"topology: {topo.num_servers} server shards x "
-          f"{topo.num_workers} workers "
+    n_dev = len(jax.devices())
+    down, up, flops = heterogeneous_fleet(n_dev, args.worker_flops)
+    config = RuntimeConfig(
+        runtime="ps", arch=args.arch, batch=args.batch, seq=args.seq,
+        optimizer="adamw", lr=1e-3,
+        schedule=ScheduleConfig(topology=TopologyConfig(
+            servers=args.servers, down_gbps=down, up_gbps=up,
+            worker_flops=flops)))
+    print(f"topology: {args.servers} server shards x {n_dev} workers "
           f"(half at 1/4 compute on 1/4 bandwidth)")
 
     # --- 1. per-worker planning: the decompositions genuinely differ ----
+    cfg = get_config(args.arch).reduced()
+    shape = InputShape("edge-ps", args.seq, args.batch, "train")
+    topo = (config.schedule.topology or TopologyConfig()).build(n_dev)
     costs = topo.topology_costs(layer_profiles(cfg, shape))
     per_worker = schedule_topology(costs, "dynacomm")
     from repro.core import iteration_time
@@ -84,21 +90,16 @@ def main():
           f"{len(decision[1])} push segments, straggler makespan "
           f"{makespan:.4f}s\n")
 
-    # --- 2. sync mode on the device mesh --------------------------------
-    tr = PSTrainer.from_topology(cfg, mesh, topo, adamw(1e-3), shape)
+    # --- 2. sync mode on the device mesh, via the runtime factory -------
+    rt = build_runtime(config)
+    tr = rt.trainer
     print(render_ps_timeline(costs, decision_from_plan(tr.plan)))
     owners = tr.segment_owners()
     print(f"segment -> shard routing: pulls {owners['forward']}, "
           f"pushes {owners['backward']}")
-    state = tr.init_state(jax.random.PRNGKey(0))
-    step = jax.jit(tr.build_train_step())
-    pipe = SyntheticText(cfg.vocab_size, args.seq, args.batch, seed=0)
-    for i in range(args.steps):
-        state, loss = step(state, pipe.batch(i))
-        if (i + 1) % 10 == 0:
-            print(f"  sync step {i + 1:3d}  loss {float(loss):.4f}")
+    rt.fit(args.steps, log_every=10)
 
-    # --- 3. async bounded staleness on the smoke CNN --------------------
+    # --- 3. async bounded staleness on the smoke CNN (library API) ------
     print(f"\nasync bounded-staleness (k={args.staleness}) on the smoke "
           f"CNN:")
     params = small_cnn_init(jax.random.PRNGKey(0))

@@ -1,12 +1,12 @@
 """End-to-end driver: train a ~100M-parameter model with the DynaComm
 bucketed ZeRO trainer for a few hundred steps.
 
-Runs on however many host devices exist (set
-``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for a multi-device
-CPU demo).  The per-epoch re-scheduling loop (paper Section IV-C) is live:
-cost vectors come from the analytic profiler, the DP re-plans every
-``reschedule_every`` steps, and the trainer rebuilds its buckets when the
-decision changes.
+Since the ``repro.runtime`` registry landed, this whole pipeline —
+profile → DP decision → bucket plan → bucketed trainer — is one config
+literal: the example builds a ``RuntimeConfig``, hands the (custom,
+~100M-param) arch to ``build_runtime``, and drives the returned
+``Trainer`` protocol object.  Swap ``runtime="zero"`` for any other
+registered name to run the same model under a different regime.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/edge_training.py --steps 200
@@ -17,19 +17,10 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh
 
 from repro.configs import get_config
-from repro.core import (DynaCommScheduler, EdgeNetworkModel,
-                        costs_from_profiles, plan_from_decision)
-from repro.configs.base import InputShape
-from repro.data.pipeline import SyntheticText
-from repro.dist.zero import ZeroTrainer
-from repro.models import num_sched_layers
-from repro.models.profiles import layer_profiles
-from repro.optim import adamw
+from repro.runtime import (MeasureConfig, NetworkConfig, RuntimeConfig,
+                           ScheduleConfig, build_runtime)
 
 
 def main():
@@ -41,7 +32,7 @@ def main():
     ap.add_argument("--d-model", type=int, default=512)
     ap.add_argument("--layers", type=int, default=8)
     ap.add_argument("--strategy", default="dynacomm")
-    ap.add_argument("--reschedule-every", type=int, default=100)
+    ap.add_argument("--bw-gbps", type=float, default=1.0)
     args = ap.parse_args()
 
     # ~100M-param reduced variant of the chosen architecture
@@ -50,45 +41,29 @@ def main():
                                       d_model=args.d_model, vocab=8192),
         name=f"{args.arch}-demo")
     n_dev = len(jax.devices())
-    mesh = Mesh(np.array(jax.devices()).reshape(n_dev,), ("data",))
     print(f"devices: {n_dev}  arch: {cfg.name}  layers: {cfg.num_layers}  "
           f"d_model: {cfg.d_model}")
 
-    # run-time profiling → DP decision → bucket plan (paper Fig. 4 loop)
-    shape = InputShape("demo", args.seq, args.batch, "train")
-    costs = costs_from_profiles(
-        layer_profiles(cfg, shape),
-        net=EdgeNetworkModel(bandwidth_bps=1e9), compute_flops_per_s=1e12)
-    scheduler = DynaCommScheduler(strategy=args.strategy,
-                                  reschedule_every=args.reschedule_every)
-    Ls = num_sched_layers(cfg)
-
-    decision = scheduler.decision_for_iteration(costs)
-    plan = plan_from_decision(*decision, Ls)
+    # the whole regime is one config literal; the custom arch rides along
+    config = RuntimeConfig(
+        runtime="zero", arch=cfg.name, batch=args.batch, seq=args.seq,
+        schedule=ScheduleConfig(
+            strategy=args.strategy,
+            network=NetworkConfig(bandwidth_gbps=args.bw_gbps)),
+        measure=MeasureConfig(compute_flops_per_s=1e12))
+    rt = build_runtime(config, model=cfg)
+    plan = rt.plan
     print(f"strategy {args.strategy}: {len(plan.forward)} pull buckets, "
-          f"{len(plan.backward)} push buckets "
-          f"(scheduling took {scheduler.last_scheduling_seconds * 1e3:.2f} ms)")
+          f"{len(plan.backward)} push buckets (scheduling took "
+          f"{rt.scheduler.last_scheduling_seconds * 1e3:.2f} ms)")
 
-    trainer = ZeroTrainer(cfg=cfg, mesh=mesh, plan=plan, optimizer=adamw(3e-4))
-    state = trainer.init_state(jax.random.PRNGKey(0))
-    step_fn = jax.jit(trainer.build_train_step())
-
-    pipe = SyntheticText(cfg.vocab_size, args.seq, args.batch, seed=0)
     t0 = time.perf_counter()
-    for i in range(args.steps):
-        batch = pipe.batch(i)
-        # per-epoch re-scheduling: rebuild buckets if the decision changed
-        new_decision = scheduler.decision_for_iteration(costs)
-        if new_decision != decision:
-            decision = new_decision
-            plan = plan_from_decision(*decision, Ls)
-            trainer = ZeroTrainer(cfg=cfg, mesh=mesh, plan=plan,
-                                  optimizer=adamw(3e-4))
-            step_fn = jax.jit(trainer.build_train_step())
-        state, loss = step_fn(state, batch)
-        if (i + 1) % 20 == 0:
-            dt = (time.perf_counter() - t0) / (i + 1)
-            print(f"step {i + 1:4d}  loss {float(loss):.4f}  {dt:.3f}s/step")
+    losses = rt.fit(args.steps, log_every=20)
+    dt = (time.perf_counter() - t0) / max(len(losses), 1)
+    led = rt.ledger
+    print(f"{len(losses)} steps at {dt:.3f}s/step; moved "
+          f"{led['pull_bytes'] / 1e9:.2f} GB down / "
+          f"{led['push_bytes'] / 1e9:.2f} GB up")
     print("done.")
 
 

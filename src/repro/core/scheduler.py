@@ -220,6 +220,29 @@ class TopologyScheduler:
         """Drop the cached decision without disturbing epoch alignment."""
         self._decision = None
 
+    def _tuplize(self, d):
+        """Rebuild tuple-typed decisions from JSON-roundtripped lists."""
+        def one(dec):
+            return (tuple(tuple(s) for s in dec[0]),
+                    tuple(tuple(s) for s in dec[1]))
+        return one(d) if self.mode == "consensus" \
+            else tuple(one(w) for w in d)
+
+    def state_dict(self) -> Dict[str, object]:
+        """Checkpointable loop state (decision in segment form)."""
+        return {"iter_seen": self._iter_seen,
+                "decision": self._decision,
+                "last_scheduling_seconds": self.last_scheduling_seconds,
+                "last_makespan": self.last_makespan}
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        self._iter_seen = int(state["iter_seen"])
+        d = state["decision"]
+        self._decision = None if d is None else self._tuplize(d)
+        self.last_scheduling_seconds = float(
+            state.get("last_scheduling_seconds", 0.0))
+        self.last_makespan = float(state.get("last_makespan", 0.0))
+
     def reset(self) -> None:
         self._decision = None
         self._iter_seen = 0

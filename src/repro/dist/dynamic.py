@@ -6,21 +6,19 @@ the two halves — ``repro.core`` decides, ``repro.dist.zero`` executes — and
 ``DynamicTrainer`` is the driver that connects them during training:
 
 * per-sched-layer ``fc``/``bc`` come from *measured* wall-clock timings of
-  the jitted per-layer applies (``LayerTimingHook``, the mxnet.profiler
-  analogue) or from the analytic profiles (deterministic; the default);
+  the jitted per-layer applies (``repro.runtime.measure``, the
+  mxnet.profiler analogue) or from the analytic profiles (deterministic;
+  the default);
 * ``pt``/``gt``/``Δt`` come from the *active* network model — a
   ``NetworkSchedule`` makes the network condition time-varying (e.g. the
   uplink dropping 10 Gbps → 1 Gbps at epoch k), which is what makes
   re-scheduling visible;
 * on every epoch boundary the ``DynaCommScheduler`` re-plans; when the
   decision changes, the plan is converted with ``plan_from_decision`` and a
-  new compiled step is swapped in.  Compiled steps are cached **keyed by
-  ``BucketPlan``**, so a revisited plan (bandwidth recovers) never
-  re-traces — the swap is a dictionary lookup;
-* every re-schedule records a ``RescheduleEvent`` carrying the scheduling
-  wall time and the paper's Table I ``scheduling_overhead_hidden`` check
-  (does the DP fit in the idle window while the last gradient push is in
-  flight?).
+  new compiled step is swapped in.  The compiled-step cache, the
+  ``RescheduleEvent`` bookkeeping, and the Table I idle-window check live
+  in :class:`repro.runtime.replan.ReplanMixin`, shared with the PS-regime
+  driver (``repro.ps.dynamic``).
 
 Because the ZeRO state layout (one ``FlatSpec`` flat buffer per sched
 layer) is plan-independent, states carry across plan swaps unchanged, and
@@ -31,97 +29,47 @@ plan sequence statically (asserted by ``tests/test_dynamic.py``).
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.configs.base import ArchConfig, InputShape
-from repro.core.buckets import BucketPlan, plan_from_decision
+from repro.core.buckets import plan_from_decision
 from repro.core.costmodel import LayerCosts
 from repro.core.netmodel import NetworkSchedule, as_schedule
 from repro.core.profiler import LayerTimingHook, costs_from_profiles
 from repro.core.scheduler import Decision, DynaCommScheduler
 from repro.dist.zero import ZeroTrainer
-from repro.launch.hlo_analysis import collective_bytes
 from repro.models import model as model_lib
 from repro.models.profiles import layer_profiles
 from repro.optim import Optimizer
+from repro.runtime.measure import measure_layer_times, measurement_due
+from repro.runtime.replan import (ReplanMixin, hlo_collective_counts,
+                                  sequential_plan)
+
+__all__ = ["DynamicTrainer", "hlo_collective_counts", "sequential_plan"]
+
+_MOVED = ("PlanStepCache", "RescheduleEvent")
 
 
-def hlo_collective_counts(hlo_text: str) -> Tuple[int, int]:
-    """(#all-gathers, #reduce-scatters) in a compiled HLO dump."""
-    counts = collective_bytes(hlo_text)["_counts"]
-    return counts["all-gather"], counts["reduce-scatter"]
-
-
-def sequential_plan(num_layers: int) -> BucketPlan:
-    """The whole model as one pull and one push bucket (always valid)."""
-    return BucketPlan(forward=(tuple(range(num_layers)),),
-                      backward=(tuple(range(num_layers - 1, -1, -1)),))
-
-
-@dataclasses.dataclass(frozen=True)
-class RescheduleEvent:
-    """One scheduling pass (paper Table I bookkeeping)."""
-
-    step: int                     # global step index at the epoch boundary
-    epoch: int
-    plan: BucketPlan              # plan active after this pass
-    plan_changed: bool            # decision differed from the previous epoch
-    retraced: bool                # False ⇒ compiled-step cache hit (or no swap)
-    scheduling_seconds: float     # wall time of the DP re-plan
-    overhead_hidden: bool         # fits in the Δt + gt¹ idle window (Table I)
-    trigger: str = "epoch"        # "epoch" boundary | "drift" detector
-
-
-class PlanStepCache:
-    """``BucketPlan``-keyed AOT compiled-step cache shared by the dynamic
-    drivers (this module's ``DynamicTrainer`` and
-    ``repro.ps.dynamic.DynamicPSTrainer``): each distinct plan is traced
-    and compiled exactly once (``.lower().compile()``), revisits are
-    dictionary lookups, and per-plan HLO collective counts are kept for
-    the structural assertions."""
-
-    def __init__(self):
-        self._steps: Dict[BucketPlan, Callable] = {}
-        self._hlo: Dict[BucketPlan, Tuple[int, int]] = {}
-        self.traces = 0                # compile-cache misses
-        self.hits = 0                  # plan *swaps* served from the cache
-
-    @property
-    def plans(self) -> Tuple[BucketPlan, ...]:
-        return tuple(self._steps)
-
-    def hlo_counts(self, plan: BucketPlan) -> Tuple[int, int]:
-        """(#all-gathers, #reduce-scatters) of a cached plan's step."""
-        if plan not in self._hlo:
-            raise KeyError(f"plan {plan} has no compiled step yet")
-        return self._hlo[plan]
-
-    def step_for(self, plan: BucketPlan, build_step: Callable[[], Callable],
-                 state, batch, *, count_hit: bool) -> Tuple[Callable, bool]:
-        """The compiled step for ``plan``, compiling via ``build_step()``
-        on a miss.  Returns ``(step_fn, retraced)``; ``count_hit`` tells
-        whether a cache hit is an actual plan swap (a post-restore
-        recompile of the unchanged plan is not)."""
-        if plan in self._steps:
-            if count_hit:
-                self.hits += 1
-            return self._steps[plan], False
-        self.traces += 1
-        compiled = jax.jit(build_step()).lower(state, batch).compile()
-        self._hlo[plan] = hlo_collective_counts(compiled.as_text())
-        self._steps[plan] = compiled
-        return compiled, True
+def __getattr__(name: str):
+    # deprecation shims for the re-planning machinery that moved to
+    # repro.runtime.replan (one home instead of a dist copy reused by ps)
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.dist.dynamic.{name} moved to repro.runtime.replan; "
+            f"this alias will be removed",
+            DeprecationWarning, stacklevel=2)
+        from repro.runtime import replan
+        return getattr(replan, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
-class DynamicTrainer:
+class DynamicTrainer(ReplanMixin):
     """Epoch-boundary re-scheduling driver around :class:`ZeroTrainer`.
 
     ``network`` may be a static model or a :class:`NetworkSchedule`;
@@ -167,12 +115,9 @@ class DynamicTrainer:
                                 optimizer=self.optimizer, zero3=self.zero3,
                                 axis_name=self.axis_name,
                                 aux_weight=self.aux_weight)
-        self.events: List[RescheduleEvent] = []
-        self._cache = PlanStepCache()
+        self._init_replan()
         self._step_idx = 0
         self._decision: Optional[Decision] = None
-        self._plan: Optional[BucketPlan] = None
-        self._step_fn: Optional[Callable] = None
         self._costs: Optional[LayerCosts] = None
         self._measured_fc_bc: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._measured_epoch = -1
@@ -193,28 +138,15 @@ class DynamicTrainer:
     def epoch(self) -> int:
         return self._step_idx // self.steps_per_epoch
 
-    @property
-    def plan(self) -> Optional[BucketPlan]:
-        """The currently active bucket plan (None before the first step)."""
-        return self._plan
-
-    @property
-    def plans_seen(self) -> Tuple[BucketPlan, ...]:
-        return self._cache.plans
-
-    @property
-    def traces(self) -> int:
-        """Compiled-step cache misses (one trace per distinct plan)."""
-        return self._cache.traces
-
-    @property
-    def cache_hits(self) -> int:
-        """Plan swaps served from the compiled-step cache."""
-        return self._cache.hits
-
-    def hlo_counts(self, plan: Optional[BucketPlan] = None) -> Tuple[int, int]:
-        """(#all-gathers, #reduce-scatters) of a cached plan's compiled step."""
-        return self._cache.hlo_counts(self._plan if plan is None else plan)
+    def timeline(self):
+        """Per-phase timeline of the active plan against the most recent
+        cost vectors (``None`` before the first step)."""
+        from repro.core.buckets import decision_from_plan
+        from repro.core.simulator import simulate_iteration
+        if self._plan is None or self._costs is None:
+            return None
+        return simulate_iteration(self._costs,
+                                  *decision_from_plan(self._plan))
 
     # ------------------------------------------------------------------
     # cost vectors
@@ -245,9 +177,8 @@ class DynamicTrainer:
             return costs_from_profiles(
                 layer_profiles(self.cfg, self._input_shape_for(batch)),
                 net=net, compute_flops_per_s=self.compute_flops_per_s)
-        stale = (self.remeasure_every > 0 and
-                 epoch - self._measured_epoch >= self.remeasure_every)
-        if self._measured_fc_bc is None or stale or remeasure:
+        if measurement_due(self._measured_fc_bc, self._measured_epoch,
+                           epoch, self.remeasure_every, force=remeasure):
             measured = self.measure_costs(state, batch, net=net)
             self._measured_fc_bc = (measured.fc, measured.bc)
             self._measured_epoch = epoch
@@ -259,65 +190,14 @@ class DynamicTrainer:
 
     def measure_costs(self, state, batch, *, net=None,
                       iters: Optional[int] = None) -> LayerCosts:
-        """Measured per-sched-layer fc/bc via the :class:`LayerTimingHook`.
-
-        Each sched layer's forward apply and VJP is jitted and timed
-        standalone (the run-time analogue of the paper's per-layer
-        mxnet.profiler pass); pt/gt/Δt stay analytic from ``net``.
-        """
+        """Measured per-sched-layer fc/bc via
+        :func:`repro.runtime.measure.measure_layer_times`; pt/gt/Δt stay
+        analytic from ``net``."""
         net = self.network.model_at(self.epoch) if net is None else net
         iters = self.measure_iters if iters is None else iters
-        tr, hook = self.base, self.hook
-        Ls, kinds = tr.num_layers, tr._kinds
-        calls = hook.warmup + iters
-        trees = jax.device_get(
-            model_lib.sched_layer_trees(tr.params_from_state(state)))
-        hook.reset()
-
-        one = jnp.ones((), jnp.float32)
-        aux_ct = jnp.asarray(tr.aux_weight, jnp.float32)
-
-        embed_fwd = jax.jit(lambda p, b: tr._apply_embed(p, b))
-        h0 = jax.block_until_ready(embed_fwd(trees[0], batch))
-        ct_h = jnp.ones_like(h0)
-        timed = hook.timed("fc", 0, embed_fwd)
-        for _ in range(calls):
-            timed(trees[0], batch)
-        embed_bwd = jax.jit(lambda p, b, ct: jax.vjp(
-            lambda pp: tr._apply_embed(pp, b), p)[1](ct))
-        timed = hook.timed("bc", 0, embed_bwd)
-        for _ in range(calls):
-            timed(trees[0], batch, ct_h)
-
-        # one jitted fwd/bwd per distinct layer kind — layers of the same
-        # kind share the compilation (their shapes match)
-        blk_fwd = {k: jax.jit(lambda p, x, _k=k: tr._apply_block(p, x, _k))
-                   for k in set(kinds)}
-        blk_bwd = {k: jax.jit(lambda p, x, ct, a, _k=k: jax.vjp(
-                       lambda pp, xx: tr._apply_block(pp, xx, _k), p, x
-                   )[1]((ct, a)))
-                   for k in set(kinds)}
-        for l in range(1, Ls - 1):
-            kind = kinds[l - 1]
-            timed = hook.timed("fc", l, blk_fwd[kind])
-            for _ in range(calls):
-                timed(trees[l], h0)
-            timed = hook.timed("bc", l, blk_bwd[kind])
-            for _ in range(calls):
-                timed(trees[l], h0, ct_h, aux_ct)
-
-        fin_fwd = jax.jit(lambda pf, pe, x, b: tr._apply_final(pf, pe, x, b))
-        timed = hook.timed("fc", Ls - 1, fin_fwd)
-        for _ in range(calls):
-            timed(trees[Ls - 1], trees[0], h0, batch)
-        fin_bwd = jax.jit(lambda pf, pe, x, b, ct: jax.vjp(
-            lambda a, c, d: tr._apply_final(a, c, d, b), pf, pe, x)[1](ct))
-        timed = hook.timed("bc", Ls - 1, fin_bwd)
-        for _ in range(calls):
-            timed(trees[Ls - 1], trees[0], h0, batch, one)
-
+        measure_layer_times(self.base, self.hook, state, batch, iters=iters)
         pb = np.asarray(model_lib.sched_layer_bytes(self.cfg), np.float64)
-        return hook.costs(param_bytes=pb, net=net)
+        return self.hook.costs(param_bytes=pb, net=net)
 
     # ------------------------------------------------------------------
     # the dynamic loop
@@ -339,24 +219,15 @@ class DynamicTrainer:
         if not boundary and not changed and self._step_fn is not None:
             return
         plan = plan_from_decision(*decision, self.base.num_layers)
-        prev = self._plan
-        retraced = False
-        if plan != prev or self._step_fn is None:
-            self._step_fn, retraced = self._cache.step_for(
-                plan,
-                lambda: self.base.with_plan(plan).build_train_step(),
-                state, batch, count_hit=plan != prev)
-            self._plan = plan
+        prev, retraced = self._activate_plan(
+            plan, lambda: self.base.with_plan(plan).build_train_step(),
+            state, batch)
         self._decision = decision
         if boundary or changed:
-            self.events.append(RescheduleEvent(
+            self._record_reschedule(
                 step=i, epoch=i // self.steps_per_epoch, plan=plan,
-                plan_changed=prev is not None and plan != prev,
-                retraced=retraced,
-                scheduling_seconds=self.scheduler.last_scheduling_seconds,
-                overhead_hidden=self.scheduler.scheduling_overhead_hidden(
-                    self._costs),
-                trigger="drift" if drift else "epoch"))
+                prev=prev, retraced=retraced, scheduler=self.scheduler,
+                costs=self._costs, trigger="drift" if drift else "epoch")
 
     def step(self, state, batch):
         """One training step; re-plans on epoch boundaries — and, when a
@@ -376,92 +247,22 @@ class DynamicTrainer:
         return new_state, loss
 
     # ------------------------------------------------------------------
-    # loop-state checkpointing (``repro.checkpoint``)
-    #
-    # The *model* state is checkpointed separately (it is an ordinary
-    # pytree); these methods capture the dynamic-loop bookkeeping — the
-    # step/scheduler iteration counters, the active decision/plan, and
-    # the RescheduleEvent history — so a resumed run re-schedules on the
-    # same epoch boundaries and replays the same plan sequence.  Compiled
-    # steps are not serializable; the restored plan recompiles lazily on
-    # the first post-restore step (no scheduling event is recorded).
+    # loop-state checkpointing — the shared body lives in ReplanMixin;
+    # this driver adds the drift-detector extras
     # ------------------------------------------------------------------
-
-    @staticmethod
-    def _plan_to_obj(plan: Optional[BucketPlan]):
-        if plan is None:
-            return None
-        return {"forward": [list(b) for b in plan.forward],
-                "backward": [list(b) for b in plan.backward]}
-
-    @staticmethod
-    def _plan_from_obj(obj) -> Optional[BucketPlan]:
-        if obj is None:
-            return None
-        return BucketPlan(
-            forward=tuple(tuple(b) for b in obj["forward"]),
-            backward=tuple(tuple(b) for b in obj["backward"]))
 
     def loop_state(self) -> Dict[str, np.ndarray]:
         """The dynamic-loop bookkeeping as a checkpointable pytree."""
-        meta = {
-            "scheduler": self.scheduler.state_dict(),
-            "plan": self._plan_to_obj(self._plan),
+        return super().loop_state(extra_meta={
             "drift_pending": self._drift_pending,
             "drift_detector": (self.drift_detector.state_dict()
                                if self.drift_detector is not None and
                                hasattr(self.drift_detector, "state_dict")
-                               else None),
-            "events": [{
-                "step": e.step, "epoch": e.epoch,
-                "plan": self._plan_to_obj(e.plan),
-                "plan_changed": e.plan_changed, "retraced": e.retraced,
-                "scheduling_seconds": e.scheduling_seconds,
-                "overhead_hidden": e.overhead_hidden, "trigger": e.trigger,
-            } for e in self.events],
-            "measured_epoch": self._measured_epoch,
-        }
-        state = {"step_idx": np.asarray(self._step_idx, np.int64),
-                 "meta": np.asarray(json.dumps(meta))}
-        if self._measured_fc_bc is not None:
-            fc, bc = self._measured_fc_bc
-            state["measured_fc"] = np.asarray(fc, np.float64)
-            state["measured_bc"] = np.asarray(bc, np.float64)
-        return state
-
-    def save_loop_state(self, path: str) -> None:
-        save_checkpoint(path, self.loop_state(), step=self._step_idx)
+                               else None)})
 
     def restore_loop_state(self, path: str) -> None:
-        Ls = self.base.num_layers
-        template: Dict[str, np.ndarray] = {
-            "step_idx": np.zeros((), np.int64), "meta": np.asarray("")}
-        if self.cost_source == "measured":
-            with np.load(path) as probe:
-                has_measured = "measured_fc" in probe.files
-            if has_measured:       # absent ⇒ saved before 1st measurement
-                template["measured_fc"] = np.zeros((Ls,), np.float64)
-                template["measured_bc"] = np.zeros((Ls,), np.float64)
-        tree, _ = load_checkpoint(path, template)
-        meta = json.loads(str(tree["meta"]))
-        self._step_idx = int(tree["step_idx"])
-        sched = dict(meta["scheduler"])
-        self.scheduler.load_state_dict(sched)
+        meta = self._restore_loop_common(path)
         self._decision = self.scheduler._decision
-        self._plan = self._plan_from_obj(meta["plan"])
-        self._measured_epoch = int(meta.get("measured_epoch", -1))
-        if "measured_fc" in tree:
-            self._measured_fc_bc = (np.asarray(tree["measured_fc"]),
-                                    np.asarray(tree["measured_bc"]))
-        self.events = [RescheduleEvent(
-            step=e["step"], epoch=e["epoch"],
-            plan=self._plan_from_obj(e["plan"]),
-            plan_changed=e["plan_changed"], retraced=e["retraced"],
-            scheduling_seconds=e["scheduling_seconds"],
-            overhead_hidden=e["overhead_hidden"],
-            trigger=e.get("trigger", "epoch")) for e in meta["events"]]
-        self._step_fn = None       # recompiled lazily on the next step
-        self._costs = None
         self._drift_pending = bool(meta.get("drift_pending", False))
         det_state = meta.get("drift_detector")
         if det_state is not None and self.drift_detector is not None and \

@@ -1,34 +1,33 @@
-"""Training launcher: ``--arch <id>`` + input shape + strategy.
+"""Training launcher: a thin client of the ``repro.runtime`` registry.
 
-Four runtimes:
+Every regime is one :class:`repro.runtime.RuntimeConfig` built through
+:func:`repro.runtime.build_runtime` — the flags below are nothing but an
+argparse → config mapping, and ``--config runtime.json`` bypasses them
+entirely (``--dump-config`` prints the equivalent JSON for any flag
+combination, which is exactly what the smoke configs under
+``examples/runtime_configs/`` contain).
 
-* ``--runtime local`` (default) — single-process jit training on whatever
-  devices exist; reduced configs runnable on CPU.
-* ``--runtime zero`` — the DynaComm-bucketed ZeRO trainer over a 1-D data
-  mesh (all local devices), schedule chosen by ``--strategy``; the plan is
-  decided once at startup.
-* ``--runtime dynamic`` — the run-time loop (paper Section IV-C): the
-  scheduler re-plans every ``--steps-per-epoch`` steps against the active
-  network model and swaps compiled steps when the decision changes.  Pair
-  with ``--bw-shift-gbps`` to script a bandwidth drift and watch the
-  schedule re-segment mid-training; ``--drift-detect`` re-schedules from
-  *observed* step times instead.
-* ``--runtime ps`` — the parameter-server subsystem (the paper's actual
-  topology): ``--ps-servers`` shards × one worker per device behind
-  asymmetric ``--down-gbps``/``--up-gbps`` links, consensus-planned via
-  the per-topology cost model.  Synchronous by default;
-  ``--staleness k`` switches to bounded-staleness asynchronous execution
-  (host-level event loop, one logical worker per ``--ps-workers``),
-  with ``--throttle reject`` (stale pushes evicted) or ``--throttle
-  wait`` (SSP wait-at-barrier: nothing dropped, fast workers block).
-* ``--runtime dynamic-ps`` — the run-time loop in the PS regime: the
-  consensus plan is re-derived every ``--steps-per-epoch`` steps against
-  a *time-varying topology* (``--up-shift-gbps`` degrades every worker's
-  uplink at ``--shift-epoch``) and compiled steps are swapped from the
-  plan-keyed cache.  With ``--staleness k`` the loop goes asynchronous:
-  per-worker re-plans swapped into the bounded-staleness event loop
-  (``--throttle`` selects rejection or SSP wait), one topology epoch per
-  ``--steps-per-epoch`` accepted pushes.
+Runtimes (``--runtime``, ``--staleness k`` switches the ps variants to
+their asynchronous form):
+
+* ``local`` (default) — single-process jit training on whatever devices
+  exist; reduced configs runnable on CPU.
+* ``zero`` — the DynaComm-bucketed ZeRO trainer over a 1-D data mesh,
+  schedule chosen by ``--strategy``; the plan is decided once at startup.
+* ``dynamic`` — the run-time loop (paper Section IV-C): re-plan every
+  ``--steps-per-epoch`` steps against the active network model, swap
+  compiled steps when the decision changes.  ``--bw-shift-gbps`` scripts
+  a bandwidth drift; ``--drift-detect`` re-schedules from *observed* step
+  times instead.
+* ``ps`` — the parameter-server subsystem: ``--ps-servers`` shards behind
+  asymmetric ``--down-gbps``/``--up-gbps`` links, consensus-planned.
+  With ``--staleness k``: bounded-staleness asynchronous execution
+  (``--throttle reject|wait``; ``--aggregate`` commits same-version
+  pushes as one BSP step).
+* ``dynamic-ps`` — the run-time loop in the PS regime over a
+  time-varying topology (``--up-shift-gbps`` degrades every uplink at
+  ``--shift-epoch``); with ``--staleness k``, per-worker re-plans swapped
+  into the async event loop.
 
 Examples::
 
@@ -41,10 +40,8 @@ Examples::
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --reduced --runtime dynamic --steps 60 --steps-per-epoch 20 \
         --bw-gbps 10 --bw-shift-gbps 1 --shift-epoch 1
-    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
-        --reduced --runtime ps --ps-servers 2 --down-gbps 10 --up-gbps 1 \
-        --steps 30
+    PYTHONPATH=src python -m repro.launch.train \
+        --config examples/runtime_configs/dynamic_ps.json --steps 12
 """
 
 from __future__ import annotations
@@ -52,34 +49,108 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import numpy as np
-from jax.sharding import Mesh
+from repro.configs import ARCHITECTURES
+from repro.runtime import (ExecutionConfig, MeasureConfig, NetworkConfig,
+                           RuntimeConfig, ScheduleConfig, TopologyConfig,
+                           build_runtime)
 
-from repro.configs import ARCHITECTURES, get_config
-from repro.configs.base import InputShape
-from repro.core import (EdgeNetworkModel, costs_from_profiles,
-                        DynaCommScheduler, plan_from_decision)
-from repro.data.pipeline import SyntheticText
-from repro.models import num_sched_layers
-from repro.models.profiles import layer_profiles
-from repro.optim import adamw, sgd
-from repro.train.loop import TrainLoop
+
+def config_from_flags(args) -> RuntimeConfig:
+    """The argparse → RuntimeConfig mapping (the whole launcher logic)."""
+    name = args.runtime
+    if args.staleness is not None and name in ("ps", "dynamic-ps"):
+        name += "-async"
+
+    network = topology = None
+    if name in ("zero", "dynamic"):
+        # pass the shift through even for 'zero': RuntimeConfig owns the
+        # "a drift needs the run-time loop" diagnostic
+        network = NetworkConfig(
+            bandwidth_gbps=args.bw_gbps,
+            shift_gbps=args.bw_shift_gbps,
+            shift_epoch=args.shift_epoch)
+    elif name != "local":
+        up_shift = None
+        if args.up_shift_gbps is not None:
+            if args.up_shift_gbps <= 0:
+                raise SystemExit(f"--up-shift-gbps must be positive, got "
+                                 f"{args.up_shift_gbps}")
+            up_shift = args.up_gbps / args.up_shift_gbps
+        topology = TopologyConfig(
+            servers=args.ps_servers,
+            workers=args.ps_workers if name.endswith("async") else None,
+            down_gbps=args.down_gbps, up_gbps=args.up_gbps,
+            worker_flops=args.worker_flops,
+            up_shift_factor=up_shift, shift_epoch=args.shift_epoch)
+
+    return RuntimeConfig(
+        runtime=name, arch=args.arch, reduced=args.reduced,
+        batch=args.batch, seq=args.seq,
+        optimizer=args.optimizer, lr=args.lr,
+        schedule=ScheduleConfig(
+            strategy=args.strategy,
+            reschedule_every=args.steps_per_epoch,
+            drift_detect=args.drift_detect,
+            network=network, topology=topology),
+        execution=ExecutionConfig(
+            staleness=args.staleness, throttle=args.throttle,
+            aggregate=args.aggregate),
+        measure=MeasureConfig(
+            cost_source=args.cost_source,
+            compute_flops_per_s=args.worker_flops))
+
+
+def _print_events(rt) -> None:
+    for e in rt.events:
+        if hasattr(e, "worker_plans"):       # async per-worker re-plan
+            segs = [(len(p.forward), len(p.backward))
+                    for p in e.worker_plans]
+            print(f"epoch {e.epoch:3d} @push {e.at_push:4d}: per-worker "
+                  f"pull/push segments {segs}  "
+                  f"{'re-segmented' if e.plan_changed else 'unchanged'}  "
+                  f"sched {e.scheduling_seconds * 1e3:.2f} ms "
+                  f"hidden={e.overhead_hidden}")
+        else:                                # sync RescheduleEvent
+            extra = ""
+            if hasattr(rt.trainer, "hlo_counts"):
+                ag, rs = rt.trainer.hlo_counts(e.plan)
+                extra = f" (hlo {ag} ag / {rs} rs)"
+            print(f"epoch {e.epoch:3d} step {e.step:4d}: "
+                  f"{len(e.plan.forward)} pull / {len(e.plan.backward)} "
+                  f"push segments{extra}  "
+                  f"{'re-segmented' if e.plan_changed else 'unchanged'}"
+                  f"{' [cache hit]' if e.plan_changed and not e.retraced else ''}"
+                  f"  sched {e.scheduling_seconds * 1e3:.2f} ms "
+                  f"hidden={e.overhead_hidden}")
+    tr = getattr(rt, "trainer", None)
+    if tr is not None and hasattr(tr, "traces"):
+        print(f"[{rt.config.runtime}] traces {tr.traces}, "
+              f"cache hits {tr.cache_hits}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
+    ap.add_argument("--config", default=None,
+                    help="build the runtime from this RuntimeConfig JSON "
+                         "file instead of the flags below")
+    ap.add_argument("--dump-config", action="store_true",
+                    help="print the RuntimeConfig JSON for these flags "
+                         "and exit")
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES),
+                    default="granite-3-2b")
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant (CPU-friendly)")
     ap.add_argument("--runtime",
-                    choices=("local", "zero", "dynamic", "ps", "dynamic-ps"),
-                    default="local")
+                    choices=("local", "zero", "dynamic", "ps", "ps-async",
+                             "dynamic-ps", "dynamic-ps-async"),
+                    default="local",
+                    help="registry name; --staleness k still upgrades "
+                         "ps/dynamic-ps to their -async form")
     ap.add_argument("--strategy", default="dynacomm",
                     choices=("sequential", "lbl", "ibatch", "dynacomm"))
     # scheduling knobs (zero + dynamic runtimes)
     ap.add_argument("--steps-per-epoch", type=int, default=20,
-                    help="re-scheduling interval of the dynamic runtime")
+                    help="re-scheduling interval of the dynamic runtimes")
     ap.add_argument("--bw-gbps", type=float, default=10.0,
                     help="edge uplink bandwidth (Gbit/s)")
     ap.add_argument("--bw-shift-gbps", type=float, default=None,
@@ -90,7 +161,7 @@ def main() -> None:
     ap.add_argument("--drift-detect", action="store_true",
                     help="dynamic runtime: also re-schedule when observed "
                          "step times drift (EWMA detector)")
-    # parameter-server knobs (ps runtime)
+    # parameter-server knobs (ps runtimes)
     ap.add_argument("--ps-servers", type=int, default=2,
                     help="number of server shards")
     ap.add_argument("--ps-workers", type=int, default=None,
@@ -101,278 +172,89 @@ def main() -> None:
     ap.add_argument("--up-gbps", type=float, default=1.0,
                     help="worker→server (push) bandwidth per link")
     ap.add_argument("--staleness", type=int, default=None,
-                    help="bounded-staleness k: switch the ps runtime to "
+                    help="bounded-staleness k: switch the ps runtimes to "
                          "asynchronous execution")
     ap.add_argument("--throttle", choices=("reject", "wait"),
                     default="reject",
                     help="async ps: evict stale pushes (reject) or SSP "
-                         "wait-at-barrier (wait — slow workers always "
-                         "contribute)")
+                         "wait-at-barrier (wait)")
+    ap.add_argument("--aggregate", action="store_true",
+                    help="async ps wait throttle: commit same-version "
+                         "pushes as one BSP step")
     ap.add_argument("--up-shift-gbps", type=float, default=None,
                     help="dynamic-ps: degrade every uplink to this "
                          "bandwidth at --shift-epoch")
     ap.add_argument("--worker-flops", type=float, default=1e10,
                     help="edge-worker compute rate fed to the profiler")
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=100,
+                    help="units of progress to run (must be >= 1)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", choices=("adamw", "sgd"), default="adamw")
-    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint", default=None,
+                    help="save the runtime state here every "
+                         "--checkpoint-every units and after training")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if cfg.frontend != "none":
+    if args.config is not None:
+        config = RuntimeConfig.load(args.config)
+    else:
+        config = config_from_flags(args)
+    if args.dump_config:
+        print(config.to_json())
+        return
+    if args.steps < 1:
+        raise SystemExit(f"--steps must be >= 1, got {args.steps}")
+
+    from repro.configs import get_config
+    if get_config(config.arch).frontend != "none":
         raise SystemExit("train.py drives text archs; stubbed-modality "
                          "archs are exercised via the dry-run and tests")
 
-    opt = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr, 0.9)
-    pipe = SyntheticText(cfg.vocab_size, args.seq, args.batch, seed=0)
+    rt = build_runtime(config)
+    spec = f"[{config.runtime}] arch {config.arch}" + \
+        (" (reduced)" if config.reduced else "") + \
+        f", strategy {config.schedule.strategy}"
+    if config.regime == "ps-async":
+        spec += (f", k={config.execution.staleness or 0} "
+                 f"({config.execution.throttle}"
+                 f"{'+aggregate' if config.execution.aggregate else ''})")
+    print(spec)
 
-    if args.runtime == "local":
-        loop = TrainLoop(cfg=cfg, optimizer=opt, log_every=10,
-                         checkpoint_path=args.checkpoint,
-                         checkpoint_every=50 if args.checkpoint else 0)
-        loop.run(jax.random.PRNGKey(0), iter(pipe), num_steps=args.steps)
-        return
-
-    devs = jax.devices()
-    mesh = Mesh(np.array(devs).reshape(len(devs),), ("data",))
-    shape = InputShape("cli", args.seq, args.batch, "train")
-
-    if args.runtime == "ps":
-        _run_ps(args, cfg, mesh, opt, pipe, shape)
-        return
-
-    if args.runtime == "dynamic-ps":
-        _run_dynamic_ps(args, cfg, mesh, opt, pipe, shape)
-        return
-
-    if args.runtime == "dynamic":
-        # run-time loop: re-profile + re-plan every epoch, swap compiled
-        # steps when the decision changes
-        from repro.core import bandwidth_shift
-        from repro.dist.dynamic import DynamicTrainer
-        if args.bw_shift_gbps is not None:
-            net = bandwidth_shift(args.bw_gbps * 1e9,
-                                  args.bw_shift_gbps * 1e9,
-                                  at_epoch=args.shift_epoch)
-        else:
-            net = EdgeNetworkModel(bandwidth_bps=args.bw_gbps * 1e9)
-        detector = None
-        if args.drift_detect:
-            from repro.core import EwmaDriftDetector
-            detector = EwmaDriftDetector()
-            if args.cost_source == "analytic":
-                print("[dynamic] note: --drift-detect re-schedules from "
-                      "re-derived costs; with --cost-source analytic those "
-                      "only change with the scripted network schedule — "
-                      "pair with --cost-source measured to react to real "
-                      "compute drift")
-        dyn = DynamicTrainer(cfg=cfg, mesh=mesh, optimizer=opt, network=net,
-                             steps_per_epoch=args.steps_per_epoch,
-                             strategy=args.strategy, input_shape=shape,
-                             cost_source=args.cost_source,
-                             compute_flops_per_s=args.worker_flops,
-                             drift_detector=detector)
-        print(f"[dynamic] {len(devs)} devices; strategy {args.strategy}, "
-              f"re-plan every {args.steps_per_epoch} steps")
-        state = dyn.init_state(jax.random.PRNGKey(0))
-        dyn.run(state, pipe.batch, args.steps, log_every=10)
-        for e in dyn.events:
-            ag, rs = dyn.hlo_counts(e.plan)
-            print(f"epoch {e.epoch:3d} step {e.step:4d}: "
-                  f"{len(e.plan.forward)} pull / {len(e.plan.backward)} push "
-                  f"buckets (hlo {ag} ag / {rs} rs)  "
-                  f"{'re-segmented' if e.plan_changed else 'unchanged'}"
-                  f"{' [cache hit]' if e.plan_changed and not e.retraced else ''}"
-                  f"  sched {e.scheduling_seconds * 1e3:.2f} ms "
-                  f"hidden={e.overhead_hidden}")
-        print(f"[dynamic] traces {dyn.traces}, cache hits {dyn.cache_hits}")
-        return
-
-    # zero runtime: profile → schedule → bucketed trainer
-    from repro.dist.zero import ZeroTrainer
-    costs = costs_from_profiles(
-        layer_profiles(cfg, shape),
-        net=EdgeNetworkModel(bandwidth_bps=args.bw_gbps * 1e9),
-        compute_flops_per_s=args.worker_flops)
-    sched = DynaCommScheduler(strategy=args.strategy)
-    decision = sched.decision_for_iteration(costs)
-    plan = plan_from_decision(*decision, num_sched_layers(cfg))
-    print(f"[zero] {len(devs)} devices; {args.strategy}: "
-          f"{len(plan.forward)} pull / {len(plan.backward)} push buckets")
-    trainer = ZeroTrainer(cfg=cfg, mesh=mesh, plan=plan, optimizer=opt)
-    state = trainer.init_state(jax.random.PRNGKey(0))
-    step = jax.jit(trainer.build_train_step())
     t0 = time.perf_counter()
-    for i in range(args.steps):
-        state, loss = step(state, pipe.batch(i))
-        if (i + 1) % 10 == 0:
-            print(f"step {i + 1:4d}  loss {float(loss):.4f}  "
-                  f"{(time.perf_counter() - t0) / (i + 1):.3f}s/step")
+    losses = []
+    saved_at = logged_at = 0
+    # chunk by the finest active cadence so logging and periodic
+    # checkpointing each fire on their own schedule
+    cadences = [c for c in (
+        args.log_every,
+        args.checkpoint_every if args.checkpoint else 0) if c]
+    stride = min(cadences) if cadences else args.steps
+    while len(losses) < args.steps:
+        losses.extend(rt.fit(min(stride, args.steps - len(losses))))
+        if args.log_every and len(losses) - logged_at >= args.log_every:
+            dt = (time.perf_counter() - t0) / max(len(losses), 1)
+            print(f"step {len(losses):4d}  loss {losses[-1]:.4f}  "
+                  f"{dt:.3f}s/step")
+            logged_at = len(losses)
+        if args.checkpoint and args.checkpoint_every and \
+                len(losses) - saved_at >= args.checkpoint_every:
+            rt.save_state(args.checkpoint)
+            saved_at = len(losses)
 
-
-def _run_dynamic_ps(args, cfg, mesh, opt, pipe, shape) -> None:
-    """The run-time loop over a time-varying PS topology: once per
-    topology epoch, a consensus re-plan + compiled-step swap (sync), or a
-    per-worker re-plan swapped into the async event loop when
-    ``--staleness`` is given."""
-    from repro.ps import (DynamicPSTrainer, PSTopology, uplink_degradation)
-
-    n_dev = len(jax.devices())
-    W = (args.ps_workers or n_dev) if args.staleness is not None else n_dev
-    base = PSTopology.uniform(args.ps_servers, W,
-                              down_bps=args.down_gbps * 1e9,
-                              up_bps=args.up_gbps * 1e9,
-                              flops=args.worker_flops)
-    if args.up_shift_gbps is not None:
-        if args.up_shift_gbps <= 0:
-            raise SystemExit(f"--up-shift-gbps must be positive, got "
-                             f"{args.up_shift_gbps}")
-        factor = args.up_gbps / args.up_shift_gbps
-        topo = uplink_degradation(base, factor=factor,
-                                  at_epoch=args.shift_epoch)
-        drift = (f"uplinks {args.up_gbps} -> {args.up_shift_gbps} Gbps at "
-                 f"epoch {args.shift_epoch}")
-    else:
-        topo, drift = base, "static topology"
-    if args.staleness is not None:
-        _run_dynamic_ps_async(args, cfg, topo, opt, pipe, shape, drift)
-        return
-    dyn = DynamicPSTrainer(cfg=cfg, mesh=mesh, optimizer=opt, topology=topo,
-                           steps_per_epoch=args.steps_per_epoch,
-                           input_shape=shape, strategy=args.strategy)
-    print(f"[dynamic-ps] {args.ps_servers} shards x {n_dev} workers; "
-          f"{drift}; {args.strategy}, re-plan every "
-          f"{args.steps_per_epoch} steps")
-    state = dyn.init_state(jax.random.PRNGKey(0))
-    state, _ = dyn.run(state, pipe.batch, args.steps, log_every=10)
-    for e in dyn.events:
-        ag, rs = dyn.hlo_counts(e.plan)
-        print(f"epoch {e.epoch:3d} step {e.step:4d}: "
-              f"{len(e.plan.forward)} pull / {len(e.plan.backward)} push "
-              f"segments (hlo {ag} ag / {rs} rs)  "
-              f"{'re-segmented' if e.plan_changed else 'unchanged'}"
-              f"{' [cache hit]' if e.plan_changed and not e.retraced else ''}"
-              f"  sched {e.scheduling_seconds * 1e3:.2f} ms "
-              f"hidden={e.overhead_hidden}")
-    print(f"[dynamic-ps] traces {dyn.traces}, cache hits {dyn.cache_hits}")
-
-
-def _run_dynamic_ps_async(args, cfg, topo, opt, pipe, shape, drift) -> None:
-    """Asynchronous dynamic-PS: per-worker re-plan per topology epoch,
-    bounded staleness k with the selected throttle; one epoch spans
-    ``--steps-per-epoch`` accepted pushes, ``--steps`` pushes total."""
-    from repro.models import (init_params, params_from_sched_layers,
-                              sched_layer_trees, train_loss)
-    from repro.models.profiles import layer_profiles
-    from repro.ps import DynamicAsyncPSTrainer
-
-    layers = sched_layer_trees(init_params(cfg, jax.random.PRNGKey(0)))
-
-    def loss_fn(layer_list, batch):
-        return train_loss(cfg, params_from_sched_layers(layer_list), batch,
-                          aux_weight=0.01)
-
-    dyn = DynamicAsyncPSTrainer(
-        init_layers=layers, loss_fn=loss_fn, optimizer=opt, topology=topo,
-        pushes_per_epoch=args.steps_per_epoch, staleness=args.staleness,
-        throttle=args.throttle, strategy=args.strategy,
-        profiles=layer_profiles(cfg, shape))
-    print(f"[dynamic-ps] async: {dyn.topology.topology_at(0).num_servers} "
-          f"shards x {dyn.topology.num_workers} logical workers; {drift}; "
-          f"k={args.staleness} ({args.throttle} throttle), "
-          f"{args.strategy}, re-plan every {args.steps_per_epoch} of "
-          f"{args.steps} pushes")
-    log = dyn.run_pushes(args.steps, lambda w, i: pipe.batch(w * 100003 + i))
-    for e in dyn.events:
-        segs = [(len(p.forward), len(p.backward)) for p in e.worker_plans]
-        print(f"epoch {e.epoch:3d} @push {e.at_push:4d}: per-worker "
-              f"pull/push segments {segs}  "
-              f"{'re-segmented' if e.plan_changed else 'unchanged'}  "
-              f"sched {e.scheduling_seconds * 1e3:.2f} ms "
-              f"hidden={e.overhead_hidden}")
-    print(f"[dynamic-ps] {len(log.accepted)} pushes accepted, "
-          f"{log.num_rejected} rejected, {log.total_wait_s:.4f}s waited "
-          f"at the SSP barrier, max staleness {log.max_staleness} <= k, "
-          f"simulated makespan {log.makespan:.4f}s")
-
-
-def _run_ps(args, cfg, mesh, opt, pipe, shape) -> None:
-    """The parameter-server runtime: sync on the mesh, or async with a
-    bounded staleness k (host-level event loop over logical workers)."""
-    from repro.core import decision_from_plan
-    from repro.core.viz import render_ps_timeline
-    from repro.ps import AsyncPSTrainer, PSTopology, PSTrainer
-
-    n_dev = len(jax.devices())
-    if args.staleness is None:
-        topo = PSTopology.uniform(args.ps_servers, n_dev,
-                                  down_bps=args.down_gbps * 1e9,
-                                  up_bps=args.up_gbps * 1e9,
-                                  flops=args.worker_flops)
-        tr = PSTrainer.from_topology(cfg, mesh, topo, opt, shape,
-                                     strategy=args.strategy)
-        pulls, pushes = tr.expected_transfers
-        tb = tr.transfer_bytes()
-        print(f"[ps] sync: {topo.num_servers} shards x {topo.num_workers} "
-              f"workers; {args.strategy}: {pulls} pull / {pushes} push "
-              f"segments ({tb['pull'] / 1e6:.1f} MB down, "
-              f"{tb['push'] / 1e6:.1f} MB up per iter)")
-        print(render_ps_timeline(tr.topology_costs(shape),
-                                 decision_from_plan(tr.plan)))
-        state = tr.init_state(jax.random.PRNGKey(0))
-        step = jax.jit(tr.build_train_step())
-        t0 = time.perf_counter()
-        for i in range(args.steps):
-            state, loss = step(state, pipe.batch(i))
-            if (i + 1) % 10 == 0:
-                print(f"step {i + 1:4d}  loss {float(loss):.4f}  "
-                      f"{(time.perf_counter() - t0) / (i + 1):.3f}s/step")
-        return
-
-    # async: logical workers against the versioned server
-    from repro.core import plan_from_decision, schedule
-    from repro.models import (init_params, num_sched_layers,
-                              params_from_sched_layers, sched_layer_trees,
-                              train_loss)
-    W = args.ps_workers or n_dev
-    topo = PSTopology.uniform(args.ps_servers, W,
-                              down_bps=args.down_gbps * 1e9,
-                              up_bps=args.up_gbps * 1e9,
-                              flops=args.worker_flops)
-    from repro.models.profiles import layer_profiles
-    costs = topo.topology_costs(layer_profiles(cfg, shape))
-    from repro.core.scheduler import consensus_decision
-    decision, makespan = consensus_decision(costs, args.strategy)
-    plan = plan_from_decision(*decision, num_sched_layers(cfg))
-    layers = sched_layer_trees(init_params(cfg, jax.random.PRNGKey(0)))
-
-    def loss_fn(layer_list, batch):
-        return train_loss(cfg, params_from_sched_layers(layer_list), batch,
-                          aux_weight=0.01)
-
-    tr = AsyncPSTrainer(init_layers=layers, loss_fn=loss_fn, optimizer=opt,
-                        topology=topo, plan=plan,
-                        staleness=args.staleness, throttle=args.throttle,
-                        costs=costs)
-    print(f"[ps] async: {topo.num_servers} shards x {W} logical workers, "
-          f"staleness bound k={args.staleness} ({args.throttle} throttle); "
-          f"{args.strategy}: "
-          f"{len(plan.forward)} pull / {len(plan.backward)} push segments "
-          f"(sync makespan would be {makespan:.4f}s)")
-    log = tr.run(args.steps, lambda w, i: pipe.batch(w * 100003 + i))
-    acc = log.accepted
-    print(f"[ps] {len(acc)} pushes accepted, {log.num_rejected} rejected "
-          f"(stale), {log.total_wait_s:.4f}s waited at the SSP barrier, "
-          f"max staleness {log.max_staleness} <= k, simulated "
-          f"makespan {log.makespan:.4f}s")
-    for e in acc[:: max(1, len(acc) // 10)]:
-        print(f"  t={e.sim_time:8.4f}s worker {e.worker} v{e.version:3d} "
-              f"staleness {e.result.staleness}  loss {e.loss:.4f}")
+    _print_events(rt)
+    led = rt.ledger
+    print(f"[{config.runtime}] {len(losses)} units, final loss "
+          f"{losses[-1]:.4f}; transfers: "
+          f"{led['pull_bytes'] / 1e6:.1f} MB down / "
+          f"{led['push_bytes'] / 1e6:.1f} MB up "
+          f"({led['num_pulls']} pulls, {led['num_pushes']} pushes)")
+    if args.checkpoint:
+        rt.save_state(args.checkpoint)
+        print(f"saved runtime state to {args.checkpoint}")
 
 
 if __name__ == "__main__":

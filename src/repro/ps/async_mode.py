@@ -147,6 +147,11 @@ class AsyncPSTrainer:
         ``"reject"`` (server evicts stale pushes, workers recompute) or
         ``"wait"`` (SSP wait-at-barrier: fast workers block, nothing is
         dropped — see the module docstring).
+    aggregate:
+        wait throttle only: commit all same-version pushes as ONE
+        mean-gradient optimizer step once the version group completes —
+        k=0 becomes true bulk-synchronous data parallelism (one version
+        bump per round of W pushes) instead of serialized commits.
     costs:
         optional per-worker ``TopologyCosts`` driving the simulated
         clock; without it every worker's iteration costs one unit, which
@@ -158,6 +163,7 @@ class AsyncPSTrainer:
                  optimizer: Optimizer, topology: PSTopology,
                  plan: Union[BucketPlan, Sequence[BucketPlan]],
                  staleness: int = 1, throttle: str = "reject",
+                 aggregate: bool = False,
                  costs: Optional[TopologyCosts] = None):
         init_layers = list(init_layers)
         if not init_layers:
@@ -165,9 +171,21 @@ class AsyncPSTrainer:
         if throttle not in THROTTLES:
             raise ValueError(f"throttle must be one of {THROTTLES}, got "
                              f"{throttle!r}")
+        if aggregate and throttle != "wait":
+            raise ValueError(
+                "aggregate=True commits same-version pushes as one "
+                "optimizer step at the SSP barrier; it requires "
+                f"throttle='wait' (got {throttle!r})")
+        if aggregate and staleness != 0:
+            raise ValueError(
+                f"aggregate=True admits workers in full-fleet cohorts, so "
+                f"every commit has staleness 0 and k={staleness} would be "
+                f"inert — pass staleness=0 (true BSP), or drop aggregation "
+                f"for bounded-staleness overlap")
         self.topology = topology
         self.staleness = staleness
         self.throttle = throttle
+        self.aggregate = aggregate
         self.specs: Tuple[FlatSpec, ...] = tuple(
             make_flat_spec(t, 1) for t in init_layers)
         self._plans = self._as_worker_plans(plan)
@@ -321,7 +339,9 @@ class AsyncPSTrainer:
                                         self.topology.num_workers)))
         loop = self._loop
         target = loop.accepted + num_pushes
-        if self.throttle == "wait":
+        if self.throttle == "wait" and self.aggregate:
+            self._run_wait_agg(loop, target, batch_fn)
+        elif self.throttle == "wait":
             self._run_wait(loop, target, batch_fn)
         else:
             self._run_reject(loop, target, batch_fn)
@@ -412,9 +432,91 @@ class AsyncPSTrainer:
             loop.barrier.append((version, t, w, loss, grads))
             drain(t)
 
+    # -- wait throttle with BSP push aggregation ------------------------
+
+    def _push_aggregate(self, group) -> List[PushResult]:
+        """Ledger-account each group member's segmented push and commit
+        the whole group as one aggregated (mean-gradient) optimizer step
+        via :meth:`PSServer.push_aggregated`."""
+        pushes = []
+        for pin, _done_t, w, _loss, grads in group:
+            full: Dict[int, Any] = {}
+            for bucket in self._plans[w].backward:
+                for l in bucket:
+                    full[l] = flatten_tree(grads[l], self.specs[l])
+                self.server.ledger.record_push(
+                    w, self.server.segment_bytes(bucket))
+            pushes.append((w, pin, full))
+        return self.server.push_aggregated(pushes)
+
+    def _run_wait_agg(self, loop: "_LoopState", target: int,
+                      batch_fn) -> None:
+        """SSP wait with same-version aggregation: a *version group* (all
+        completions pinned at the in-flight minimum version) commits as
+        ONE mean-gradient optimizer step once its last member completes.
+
+        With every worker admitted at the same head this is exactly
+        bulk-synchronous data parallelism — at k=0 the serialized commits
+        of plain ``wait`` become true BSP rounds (the ROADMAP item), and
+        staleness at commit is 0 for every member.  Groups are atomic: a
+        run may overshoot its push target by up to ``W - 1`` accepted
+        pushes when the target lands mid-group.
+        """
+        def admit(now: float) -> None:
+            # safety gate mirroring SSP admission; under group-atomic
+            # commits every in-flight pin >= head, so this never starves
+            while loop.parked:
+                pins = [e[2] for e in loop.queue] + \
+                       [e[0] for e in loop.barrier]
+                floor = min(pins) if pins else self.server.version
+                if self.server.version - floor > self.staleness:
+                    return
+                self._start(loop, loop.parked.pop(0), now, batch_fn)
+
+        def drain(now: float) -> None:
+            while loop.barrier and loop.accepted < target:
+                loop.barrier.sort()
+                pin = loop.barrier[0][0]
+                if any(e[2] <= pin for e in loop.queue):
+                    return          # the version group is still computing
+                group = [e for e in loop.barrier if e[0] == pin]
+                del loop.barrier[:len(group)]    # sorted ⇒ group is prefix
+                results = self._push_aggregate(group)
+                for (v, done_t, w, loss, _grads), res in zip(group,
+                                                             results):
+                    assert res.accepted, \
+                        "a whole-group commit can never be stale"
+                    wait_s = now - done_t
+                    if wait_s > 0:
+                        self.server.ledger.waited_pushes += 1
+                    loop.log.events.append(AsyncPushEvent(
+                        worker=w, sim_time=now, version=v, result=res,
+                        loss=loss, retries=0, wait_s=wait_s))
+                    loop.accepted += 1
+                    loop.parked.append(w)
+                admit(now)
+
+        drain(loop.now)
+        admit(loop.now)
+        while loop.accepted < target:
+            t, w, version, loss, grads = heapq.heappop(loop.queue)
+            loop.now = t
+            loop.barrier.append((version, t, w, loss, grads))
+            drain(t)
+
     # ------------------------------------------------------------------
     # interop
     # ------------------------------------------------------------------
+
+    def reset_loop(self) -> None:
+        """Discard the event loop (clock, in-flight computations, log).
+
+        Required after restoring the server from a checkpoint: in-flight
+        computations hold gradients pinned at pre-restore versions and
+        computed against pre-rollback weights — committing them against
+        the restored parameters would silently corrupt the trajectory.
+        The next ``run`` starts a fresh loop at simulated time 0."""
+        self._loop = None
 
     @property
     def log(self) -> Optional[AsyncRunLog]:

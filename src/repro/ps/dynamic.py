@@ -10,24 +10,31 @@ layer-wise decomposition whenever the topology shifts:
 * :class:`DynamicPSTrainer` (synchronous, compiled): once per topology
   epoch, re-projects the active topology onto per-worker
   ``TopologyCosts``, re-runs the straggler-minimizing
-  ``consensus_decision``, and swaps the compiled pull/push step from a
-  ``BucketPlan``-keyed AOT cache (the ``dist/dynamic.py`` pattern:
-  ``.lower().compile()`` once per distinct plan, revisits are dictionary
-  lookups).  The ZeRO/PS state layout (one ``FlatSpec`` flat buffer per
-  sched layer) is plan-independent, so states carry across swaps and the
-  loss trajectory is bit-identical to statically running each epoch's
-  plan (asserted by ``tests/test_dynamic.py``).
+  ``consensus_decision``, and swaps the compiled pull/push step from the
+  shared :class:`repro.runtime.replan.PlanStepCache` (one trace per
+  distinct plan, revisits are dictionary lookups).  With
+  ``cost_source="measured"``, per-layer fc/bc come from *measured*
+  wall-clock timings of the jitted applies (re-measured every
+  ``remeasure_every`` topology epochs) and are rescaled to each worker's
+  compute rate — so the per-worker decompositions track real compute
+  drift, not just the analytic model.  The ZeRO/PS state layout (one
+  ``FlatSpec`` flat buffer per sched layer) is plan-independent, so
+  states carry across swaps and the loss trajectory is bit-identical to
+  statically running each epoch's plan (asserted by
+  ``tests/test_dynamic.py``).
 * :class:`DynamicAsyncPSTrainer` (asynchronous, event-driven): once per
   topology epoch, re-runs per-worker ``schedule_topology`` — each worker
   gets its own decomposition, matched to its own link and compute rate —
   and swaps the plans (and the simulated-clock costs) into the resumable
   :class:`repro.ps.async_mode.AsyncPSTrainer` loop, under either throttle
-  discipline.
+  discipline (with optional BSP push aggregation).
 
 Every re-plan records a reschedule event carrying the scheduling wall
 time and the paper's Table I overhead-hidden check against the topology's
 Δt + gt¹ idle window (the minimum over workers — the re-plan must hide
-behind *every* worker's last in-flight gradient push).
+behind *every* worker's last in-flight gradient push); the event
+bookkeeping is shared with the ZeRO driver via
+:class:`repro.runtime.replan.ReplanMixin`.
 """
 
 from __future__ import annotations
@@ -35,18 +42,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.buckets import BucketPlan, plan_from_decision
 from repro.core.costmodel import TopologyCosts
-from repro.core.profiler import LayerProfile
+from repro.core.profiler import LayerProfile, LayerTimingHook
 from repro.core.scheduler import TopologyScheduler
-from repro.dist.dynamic import PlanStepCache, RescheduleEvent
 from repro.models import model as model_lib
 from repro.models.profiles import layer_profiles
 from repro.optim import Optimizer
 from repro.ps.async_mode import AsyncPSTrainer, AsyncRunLog
 from repro.ps.topology import TopologySchedule, as_topology_schedule
 from repro.ps.worker import PSTrainer
+from repro.runtime.measure import measure_layer_times, measurement_due
+from repro.runtime.replan import ReplanMixin
 
 
 def profiles_from_specs(specs, *, flops_per_param: float = 4.0
@@ -61,13 +71,21 @@ def profiles_from_specs(specs, *, flops_per_param: float = 4.0
 
 
 @dataclasses.dataclass
-class DynamicPSTrainer:
+class DynamicPSTrainer(ReplanMixin):
     """Topology-epoch re-planning driver around :class:`PSTrainer` (sync).
 
     ``topology`` may be a static :class:`PSTopology` or a
     :class:`TopologySchedule`; the schedule's ``num_workers`` must equal
     the mesh's ``axis_name`` size (one synchronous worker per device, and
     workers cannot join or leave mid-run).
+
+    ``cost_source="measured"`` times this host's jitted per-layer applies
+    (``repro.runtime.measure``) every ``remeasure_every`` topology epochs
+    and projects the timings onto each worker by compute-rate scaling:
+    the measured vectors are taken to describe a worker running at
+    ``measure_ref_flops`` (default: the fleet's fastest rate), so worker
+    *w* sees them scaled by ``measure_ref_flops / worker_flops[w]`` while
+    pt/gt/Δt still come from its own links.
     """
 
     cfg: ArchConfig
@@ -77,6 +95,12 @@ class DynamicPSTrainer:
     steps_per_epoch: int
     input_shape: InputShape
     strategy: str = "dynacomm"
+    cost_source: str = "analytic"          # "analytic" | "measured"
+    measure_iters: int = 3
+    measure_warmup: int = 1
+    remeasure_every: int = 1      # epochs between fc/bc re-measurements;
+                                  # 0 = measure once
+    measure_ref_flops: Optional[float] = None
     zero3: bool = False
     axis_name: str = "data"
     aux_weight: float = 0.01
@@ -85,10 +109,17 @@ class DynamicPSTrainer:
         if self.steps_per_epoch < 1:
             raise ValueError(f"steps_per_epoch must be >= 1, got "
                              f"{self.steps_per_epoch}")
+        if self.cost_source not in ("analytic", "measured"):
+            raise ValueError(f"cost_source must be 'analytic' or 'measured', "
+                             f"got {self.cost_source!r}")
+        if self.remeasure_every < 0:
+            raise ValueError(f"remeasure_every must be >= 0, got "
+                             f"{self.remeasure_every}")
         self.topology: TopologySchedule = as_topology_schedule(self.topology)
         self.scheduler = TopologyScheduler(
             strategy=self.strategy, reschedule_every=self.steps_per_epoch,
             mode="consensus")
+        self.hook = LayerTimingHook(warmup=self.measure_warmup)
         self._profiles = layer_profiles(self.cfg, self.input_shape)
         Ls = model_lib.num_sched_layers(self.cfg)
         seq = BucketPlan(forward=(tuple(range(Ls)),),
@@ -98,12 +129,11 @@ class DynamicPSTrainer:
                               topology=self.topology.topology_at(0),
                               zero3=self.zero3, axis_name=self.axis_name,
                               aux_weight=self.aux_weight)
-        self.events: List[RescheduleEvent] = []
-        self._cache = PlanStepCache()
+        self._init_replan()
         self._step_idx = 0
-        self._plan: Optional[BucketPlan] = None
-        self._step_fn: Optional[Callable] = None
         self._costs: Optional[TopologyCosts] = None
+        self._measured_fc_bc: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._measured_epoch = -1
 
     # ------------------------------------------------------------------
     # state / introspection
@@ -120,34 +150,39 @@ class DynamicPSTrainer:
     def epoch(self) -> int:
         return self._step_idx // self.steps_per_epoch
 
-    @property
-    def plan(self) -> Optional[BucketPlan]:
-        """The currently active bucket plan (None before the first step)."""
-        return self._plan
+    def costs_for_epoch(self, epoch: int, state=None, batch=None, *,
+                        remeasure: bool = False) -> TopologyCosts:
+        """The active topology's per-worker cost projection.
 
-    @property
-    def plans_seen(self) -> Tuple[BucketPlan, ...]:
-        return self._cache.plans
-
-    @property
-    def traces(self) -> int:
-        """Compiled-step cache misses (one trace per distinct plan)."""
-        return self._cache.traces
-
-    @property
-    def cache_hits(self) -> int:
-        """Plan swaps served from the compiled-step cache."""
-        return self._cache.hits
-
-    def hlo_counts(self, plan: Optional[BucketPlan] = None) -> Tuple[int, int]:
-        """(#all-gathers, #reduce-scatters) of a cached plan's compiled
-        step — one pull + one push collective per plan segment."""
-        return self._cache.hlo_counts(self._plan if plan is None else plan)
-
-    def costs_for_epoch(self, epoch: int) -> TopologyCosts:
-        """The active topology's per-worker cost projection."""
-        return self.topology.topology_at(epoch).topology_costs(
-            self._profiles)
+        Analytic by default.  With ``cost_source="measured"``, fc/bc come
+        from measured host timings rescaled per worker (see the class
+        docstring); ``state``/``batch`` are required whenever a (re-)
+        measurement is due — callers that only want the cached projection
+        (timeline views, tests) can omit them.
+        """
+        topo = self.topology.topology_at(epoch)
+        if self.cost_source == "analytic":
+            return topo.topology_costs(self._profiles)
+        if measurement_due(self._measured_fc_bc, self._measured_epoch,
+                           epoch, self.remeasure_every, force=remeasure):
+            if state is None or batch is None:
+                # view accessors (timelines, tests) may read the cached
+                # projection without re-measuring; only the very first
+                # measurement has nothing to serve
+                if self._measured_fc_bc is None:
+                    raise ValueError(
+                        "cost_source='measured' needs state and batch for "
+                        "the first measurement")
+            else:
+                measure_layer_times(self.base._zero, self.hook, state,
+                                    batch, iters=self.measure_iters)
+                Ls = self.base.num_layers
+                self._measured_fc_bc = (self.hook.median("fc", Ls),
+                                        self.hook.median("bc", Ls))
+                self._measured_epoch = epoch
+        fc, bc = self._measured_fc_bc
+        return topo.topology_costs_measured(
+            self._profiles, fc=fc, bc=bc, ref_flops=self.measure_ref_flops)
 
     def timeline(self, epoch: Optional[int] = None):
         """Per-worker timeline of the *active* plan against an epoch's
@@ -182,31 +217,25 @@ class DynamicPSTrainer:
         boundary = i % self.steps_per_epoch == 0
         if boundary:
             epoch = i // self.steps_per_epoch
-            self._costs = self.costs_for_epoch(epoch)
+            self._costs = self.costs_for_epoch(epoch, state, batch)
             # the compiled data path is topology-independent; the base
             # trainer's accounting views (segment owners, transfer bytes,
             # timelines) should reflect the active fabric
             self.base.topology = self.topology.topology_at(epoch)
         decision = self.scheduler.decision_for_iteration(self._costs)
+        # (``_step_fn is None`` off-boundary ⇒ loop state was just restored
+        # from a checkpoint: recompile the active plan, no scheduling event)
         if not boundary and self._step_fn is not None:
             return
         plan = plan_from_decision(*decision, self.base.num_layers)
-        prev = self._plan
-        retraced = False
-        if plan != prev or self._step_fn is None:
-            self._step_fn, retraced = self._cache.step_for(
-                plan,
-                lambda: self.base.with_plan(plan).build_train_step(),
-                state, batch, count_hit=plan != prev)
-            self._plan = plan
-        self.events.append(RescheduleEvent(
-            step=i, epoch=i // self.steps_per_epoch, plan=plan,
-            plan_changed=prev is not None and plan != prev,
-            retraced=retraced,
-            scheduling_seconds=self.scheduler.last_scheduling_seconds,
-            overhead_hidden=self.scheduler.scheduling_overhead_hidden(
-                self._costs),
-            trigger="epoch"))
+        prev, retraced = self._activate_plan(
+            plan, lambda: self.base.with_plan(plan).build_train_step(),
+            state, batch)
+        if boundary:
+            self._record_reschedule(
+                step=i, epoch=i // self.steps_per_epoch, plan=plan,
+                prev=prev, retraced=retraced, scheduler=self.scheduler,
+                costs=self._costs)
 
     def step(self, state, batch):
         """One training step; re-plans on topology-epoch boundaries.
@@ -230,6 +259,16 @@ class DynamicPSTrainer:
                 print(f"step {i + 1:4d}  epoch {self.epoch}  "
                       f"loss {losses[-1]:.4f}  segments {f}/{b}")
         return state, losses
+
+    # ------------------------------------------------------------------
+    # loop-state checkpointing — loop_state/save_loop_state come from
+    # ReplanMixin unchanged; the restore re-points the base trainer's
+    # accounting at the resumed epoch's topology
+    # ------------------------------------------------------------------
+
+    def restore_loop_state(self, path: str) -> None:
+        self._restore_loop_common(path)
+        self.base.topology = self.topology.topology_at(self.epoch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,7 +297,8 @@ class DynamicAsyncPSTrainer:
                  loss_fn: Callable[[List[Any], Dict[str, Any]], Any],
                  optimizer: Optimizer, topology: Any,
                  pushes_per_epoch: int, staleness: int = 1,
-                 throttle: str = "reject", strategy: str = "dynacomm",
+                 throttle: str = "reject", aggregate: bool = False,
+                 strategy: str = "dynacomm",
                  profiles: Optional[Sequence[LayerProfile]] = None):
         if pushes_per_epoch < 1:
             raise ValueError(f"pushes_per_epoch must be >= 1, got "
@@ -269,7 +309,7 @@ class DynamicAsyncPSTrainer:
                                            reschedule_every=1,
                                            mode="per-worker")
         self.events: List[AsyncRescheduleEvent] = []
-        self._epoch = 0
+        self._planned_epoch = 0
         # plan epoch 0 before building the trainer (it needs plans)
         self.trainer = AsyncPSTrainer(
             init_layers=init_layers, loss_fn=loss_fn, optimizer=optimizer,
@@ -277,15 +317,22 @@ class DynamicAsyncPSTrainer:
             plan=BucketPlan(
                 forward=(tuple(range(len(init_layers))),),
                 backward=(tuple(range(len(init_layers) - 1, -1, -1)),)),
-            staleness=staleness, throttle=throttle)
+            staleness=staleness, throttle=throttle, aggregate=aggregate)
         self._profiles = (tuple(profiles) if profiles is not None
                           else profiles_from_specs(self.trainer.specs))
         self._worker_plans: Optional[Tuple[BucketPlan, ...]] = None
         self._replan(0)
 
+    def _accepted(self) -> int:
+        return 0 if self.trainer.log is None \
+            else len(self.trainer.log.accepted)
+
     @property
     def epoch(self) -> int:
-        return self._epoch
+        """The current topology epoch — a pure function of *accepted*
+        pushes, so progress is identical whether a caller drives one
+        ``run_pushes(N)`` or N chunked ``run_pushes(1)`` calls."""
+        return self._accepted() // self.pushes_per_epoch
 
     @property
     def worker_plans(self) -> Tuple[BucketPlan, ...]:
@@ -325,19 +372,38 @@ class DynamicAsyncPSTrainer:
 
     def run_pushes(self, num_pushes: int,
                    batch_fn: Callable[[int, int], Any]) -> AsyncRunLog:
-        """Run exactly ``num_pushes`` accepted pushes: a per-worker
-        re-plan on every ``pushes_per_epoch`` boundary, with a final
-        partial epoch for any remainder."""
+        """Run ``num_pushes`` more accepted pushes: a per-worker re-plan
+        whenever the cumulative accepted count crosses a
+        ``pushes_per_epoch`` boundary.  Epoch position is derived from
+        the accepted count, never from how callers chunk their calls —
+        ``run_pushes(1)`` six times re-plans at exactly the same pushes
+        as one ``run_pushes(6)``."""
         if num_pushes < 1:
             raise ValueError(f"num_pushes must be >= 1, got {num_pushes}")
         log: Optional[AsyncRunLog] = None
-        remaining = num_pushes
-        while remaining > 0:
-            chunk = min(remaining, self.pushes_per_epoch)
-            if self._epoch > 0:
-                self._replan(self._epoch)
+        # account by *accepted* pushes, not requested chunks: under BSP
+        # aggregation a run may commit a whole same-version group and
+        # overshoot its chunk — re-reading the accepted count keeps the
+        # total overshoot bounded by one group (W - 1) for the whole call
+        target = self._accepted() + num_pushes
+        while (accepted := self._accepted()) < target:
+            epoch = accepted // self.pushes_per_epoch
+            if epoch != self._planned_epoch:
+                self._replan(epoch)
+                self._planned_epoch = epoch
+            # stop at the next epoch boundary so the re-plan lands there
+            chunk = min(target - accepted,
+                        self.pushes_per_epoch -
+                        accepted % self.pushes_per_epoch)
             log = self.trainer.run(chunk, batch_fn,
-                                   reset=self._epoch == 0)
-            self._epoch += 1
-            remaining -= chunk
+                                   reset=self.trainer.log is None)
         return log
+
+    def reset_loop(self) -> None:
+        """Discard the event loop (a checkpoint restore rolled the server
+        back): progress returns to zero accepted pushes and re-planning
+        restarts from topology epoch 0 (recorded as a fresh reschedule
+        event)."""
+        self.trainer.reset_loop()
+        self._planned_epoch = 0
+        self._replan(0)

@@ -178,6 +178,52 @@ class PSServer:
         return PushResult(worker=worker, accepted=True, staleness=staleness,
                           version=self.version)
 
+    def push_aggregated(self, pushes: Sequence[
+            Tuple[int, int, Dict[int, jnp.ndarray]]]) -> List[PushResult]:
+        """Commit several *same-version* complete gradient sets as ONE
+        optimizer step (the SSP wait throttle's BSP aggregation mode).
+
+        ``pushes`` is a sequence of ``(worker, version, {layer: grad
+        flat})`` entries, every one covering all ``num_layers`` layers and
+        pinned at the same version.  The bounded-staleness gate applies to
+        the shared version once; an accepted group applies the *mean* of
+        the gradients — k=0 with every worker in the group is exactly
+        bulk-synchronous data parallelism — and bumps the version once.
+        Returns one :class:`PushResult` per entry, in order.
+        """
+        if not pushes:
+            raise ValueError("cannot aggregate an empty push group")
+        versions = {v for _, v, _ in pushes}
+        if len(versions) != 1:
+            raise ValueError(f"aggregated pushes must share one version, "
+                             f"got {sorted(versions)}")
+        (version,) = versions
+        for worker, _, grads in pushes:
+            missing = [l for l in range(self.num_layers) if l not in grads]
+            if missing:
+                raise ValueError(f"worker {worker}'s aggregated push lacks "
+                                 f"grads for layers {missing}")
+        staleness = self.version - version
+        if staleness > self.staleness_bound:
+            self.ledger.rejected_pushes += len(pushes)
+            return [PushResult(worker=w, accepted=False,
+                               staleness=staleness, version=self.version)
+                    for w, _, _ in pushes]
+        n = len(pushes)
+        mean: List[jnp.ndarray] = []
+        for l in range(self.num_layers):
+            acc = jnp.asarray(pushes[0][2][l], FLAT_DTYPE)
+            for _, _, grads in pushes[1:]:
+                acc = acc + jnp.asarray(grads[l], FLAT_DTYPE)
+            mean.append(acc / n)
+        self._flats, self._opt_state = self.optimizer.update(
+            mean, self._opt_state, self._flats)
+        self.version += 1
+        self._snapshots[self.version] = tuple(self._flats)
+        self._evict()
+        return [PushResult(worker=w, accepted=True, staleness=staleness,
+                           version=self.version) for w, _, _ in pushes]
+
     def _evict(self) -> None:
         floor = self.version - self.staleness_bound
         for v in [v for v in self._snapshots if v < floor]:
@@ -188,6 +234,34 @@ class PSServer:
         committed *now* (the quantity the bounded-staleness gate compares
         against ``staleness_bound``)."""
         return self.version - version
+
+    # ------------------------------------------------------------------
+    # checkpointing (``repro.runtime`` save_state/restore_state)
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> Dict[str, object]:
+        """Head parameters + optimizer state as a checkpointable pytree.
+
+        Pending segmented pushes and evicted snapshots are deliberately
+        excluded: checkpoint between event-loop runs, when the server is
+        quiescent."""
+        return {"flats": list(self._flats), "opt": self._opt_state,
+                "version": np.asarray(self.version, np.int64)}
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        flats = [jnp.asarray(f, FLAT_DTYPE) for f in state["flats"]]
+        if len(flats) != len(self.specs):
+            raise ValueError(f"{len(flats)} buffers for "
+                             f"{len(self.specs)} specs")
+        for l, (flat, spec) in enumerate(zip(flats, self.specs)):
+            if flat.shape != (spec.padded,):
+                raise ValueError(f"layer {l} buffer shape {flat.shape} != "
+                                 f"({spec.padded},)")
+        self._flats = flats
+        self._opt_state = state["opt"]
+        self.version = int(state["version"])
+        self._snapshots = {self.version: tuple(self._flats)}
+        self._pending = {}
 
     # ------------------------------------------------------------------
     # introspection

@@ -176,6 +176,39 @@ class PSTopology:
                               grad_bytes=gb)
             for w in range(self.num_workers)))
 
+    def topology_costs_measured(self, profiles: Sequence[LayerProfile], *,
+                                fc: Sequence[float], bc: Sequence[float],
+                                ref_flops: float | None = None
+                                ) -> TopologyCosts:
+        """Per-worker costs from *measured* per-layer fc/bc wall times.
+
+        The measured vectors describe one physical host; they are taken
+        as the timings of a worker running at ``ref_flops`` (default: the
+        fleet's fastest rate) and rescaled to each worker's own compute
+        rate — ``fc_w = fc * ref_flops / worker_flops[w]`` — while
+        transmission costs (pt/gt/Δt per direction) still come from each
+        worker's own links.  Byte payloads come from ``profiles``.
+        """
+        ref = max(self.worker_flops) if ref_flops is None else float(ref_flops)
+        if ref <= 0:
+            raise ValueError(f"ref_flops must be positive, got {ref}")
+        pb = np.asarray([p.param_bytes for p in profiles], np.float64)
+        gb = np.asarray([p.gbytes for p in profiles], np.float64)
+        fc = np.asarray(fc, np.float64)
+        bc = np.asarray(bc, np.float64)
+        if fc.shape != (len(profiles),) or bc.shape != (len(profiles),):
+            raise ValueError(f"fc/bc must have one entry per layer "
+                             f"({len(profiles)}), got {fc.shape}/{bc.shape}")
+        workers = []
+        for w in range(self.num_workers):
+            link = self.links[w]
+            scale = ref / self.worker_flops[w]
+            workers.append(LayerCosts(
+                pt=link.down.transfer_time(pb), fc=fc * scale,
+                bc=bc * scale, gt=link.up.transfer_time(gb),
+                dt=link.down.dt, dt_bwd=link.up.dt))
+        return TopologyCosts(workers=tuple(workers))
+
 
 # ---------------------------------------------------------------------------
 # Time-varying topologies (the dynamic-PS workload)

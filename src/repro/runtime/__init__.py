@@ -1,0 +1,48 @@
+"""One composable Trainer API over every execution regime.
+
+``repro.runtime`` is the layer that makes launchers, examples, and
+benchmarks *thin clients*: a frozen, JSON-round-trippable
+:class:`RuntimeConfig` names a registered runtime (``zero`` | ``dynamic``
+| ``ps`` | ``ps-async`` | ``dynamic-ps`` | ``dynamic-ps-async`` |
+``local``), and :func:`build_runtime` turns it into an object
+implementing the :class:`Trainer` protocol — ``fit`` / ``step`` /
+``events`` / ``timeline`` / ``ledger`` / ``save_state`` /
+``restore_state`` — regardless of which of the six underlying trainers
+executes underneath.  New regimes cost one ``@register_runtime`` entry,
+not a new hand-wired launcher branch.
+
+The run-time re-planning machinery the dynamic drivers share
+(:class:`PlanStepCache`, :class:`RescheduleEvent`, the Table I
+idle-window bookkeeping) lives here too, in :mod:`repro.runtime.replan`.
+"""
+
+from repro.runtime.config import (DYNAMIC_RUNTIMES, RUNTIME_REGIMES,
+                                  ExecutionConfig, MeasureConfig,
+                                  NetworkConfig, RuntimeConfig,
+                                  ScheduleConfig, TopologyConfig)
+from repro.runtime.protocol import Trainer
+from repro.runtime.replan import (PlanStepCache, ReplanMixin,
+                                  RescheduleEvent, hlo_collective_counts,
+                                  sequential_plan)
+
+__all__ = [
+    "RuntimeConfig", "ScheduleConfig", "ExecutionConfig", "MeasureConfig",
+    "NetworkConfig", "TopologyConfig",
+    "RUNTIME_REGIMES", "DYNAMIC_RUNTIMES",
+    "Trainer",
+    "PlanStepCache", "RescheduleEvent", "ReplanMixin",
+    "hlo_collective_counts", "sequential_plan",
+    "build_runtime", "register_runtime", "runtime_names", "RUNTIMES",
+]
+
+_REGISTRY_NAMES = ("build_runtime", "register_runtime", "runtime_names",
+                   "RUNTIMES")
+
+
+def __getattr__(name: str):
+    # the registry pulls in the trainer stack (dist/ps); load it lazily so
+    # `repro.dist` ← `repro.runtime.replan` stays cycle-free
+    if name in _REGISTRY_NAMES:
+        from repro.runtime import registry
+        return getattr(registry, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

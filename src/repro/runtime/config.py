@@ -1,0 +1,369 @@
+"""Frozen, JSON-round-trippable runtime configuration.
+
+One serialized description shared by launchers, examples, benchmarks, and
+checkpoints: a :class:`RuntimeConfig` names a registered runtime (see
+``repro.runtime.registry``) plus three nested blocks —
+
+* :class:`ScheduleConfig` — what the scheduler re-plans against: the
+  strategy, the re-plan interval, drift detection, and either a scalar
+  edge :class:`NetworkConfig` (ZeRO regimes) or a :class:`TopologyConfig`
+  (PS regimes), both optionally time-varying;
+* :class:`ExecutionConfig` — how plans execute: ``zero`` (bucketed ZeRO
+  collectives), ``ps-sync`` (consensus plan, one pull + one push per
+  segment), or ``ps-async`` (bounded-staleness event loop with a
+  ``reject``/``wait`` throttle and optional BSP push aggregation);
+* :class:`MeasureConfig` — where fc/bc come from: deterministic analytic
+  profiles or measured :class:`~repro.core.profiler.LayerTimingHook`
+  wall times, re-measured every ``remeasure_every`` re-plan epochs.
+
+``to_json`` → ``from_json`` is exact (``config == RuntimeConfig.from_json(
+config.to_json())``), and every cross-field inconsistency — staleness on a
+synchronous runtime, a PS topology on a ZeRO regime, aggregation without
+the wait throttle — raises ``ValueError`` at construction, not at step 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple, Union
+
+# registry-name → execution regime; the single source of truth for which
+# combinations exist (the registry registers exactly these names)
+RUNTIME_REGIMES = {
+    "local": "local",
+    "zero": "zero",
+    "dynamic": "zero",
+    "ps": "ps-sync",
+    "dynamic-ps": "ps-sync",
+    "ps-async": "ps-async",
+    "dynamic-ps-async": "ps-async",
+}
+DYNAMIC_RUNTIMES = ("dynamic", "dynamic-ps", "dynamic-ps-async")
+
+_STRATEGIES = ("sequential", "lbl", "ibatch", "dynacomm", "bruteforce")
+_THROTTLES = ("reject", "wait")
+_COST_SOURCES = ("analytic", "measured")
+
+
+def _as_tuple(x) -> Optional[Tuple[float, ...]]:
+    """Normalize per-worker scalars/sequences so JSON round-trips equal."""
+    if x is None or isinstance(x, (int, float)):
+        return x
+    return tuple(float(v) for v in x)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """Scalar edge network of the ZeRO regimes (one shared uplink)."""
+
+    bandwidth_gbps: float = 10.0
+    shift_gbps: Optional[float] = None    # drift target at shift_epoch
+    shift_epoch: int = 1
+
+    def __post_init__(self):
+        if self.bandwidth_gbps <= 0:
+            raise ValueError(f"bandwidth_gbps must be positive, got "
+                             f"{self.bandwidth_gbps}")
+        if self.shift_gbps is not None and self.shift_gbps <= 0:
+            raise ValueError(f"shift_gbps must be positive, got "
+                             f"{self.shift_gbps}")
+
+    def build(self):
+        """The ``repro.core.netmodel`` object this block describes."""
+        from repro.core import EdgeNetworkModel, bandwidth_shift
+        if self.shift_gbps is None:
+            return EdgeNetworkModel(bandwidth_bps=self.bandwidth_gbps * 1e9)
+        return bandwidth_shift(self.bandwidth_gbps * 1e9,
+                               self.shift_gbps * 1e9,
+                               at_epoch=self.shift_epoch)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyConfig:
+    """S server shards × W workers of the PS regimes.
+
+    ``down_gbps`` / ``up_gbps`` / ``worker_flops`` accept a scalar
+    (homogeneous fleet) or one value per worker (heterogeneous edges —
+    the regime the consensus/straggler machinery exists for).
+    ``workers=None`` resolves at build time to one worker per device
+    (sync) or per-device logical workers (async).
+    """
+
+    servers: int = 2
+    workers: Optional[int] = None
+    down_gbps: Union[float, Tuple[float, ...]] = 10.0
+    up_gbps: Union[float, Tuple[float, ...]] = 1.0
+    worker_flops: Union[float, Tuple[float, ...]] = 1e10
+    up_shift_factor: Optional[float] = None   # every uplink /= factor ...
+    shift_epoch: int = 1                      # ... at this epoch
+
+    def __post_init__(self):
+        for name in ("down_gbps", "up_gbps", "worker_flops"):
+            object.__setattr__(self, name, _as_tuple(getattr(self, name)))
+        if self.servers < 1:
+            raise ValueError(f"servers must be >= 1, got {self.servers}")
+        if self.workers is not None and self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.up_shift_factor is not None and self.up_shift_factor <= 0:
+            raise ValueError(f"up_shift_factor must be positive, got "
+                             f"{self.up_shift_factor}")
+
+    def _per_worker(self, value, W: int) -> Tuple[float, ...]:
+        if isinstance(value, tuple):
+            if len(value) != W:
+                raise ValueError(f"{len(value)} per-worker values for "
+                                 f"{W} workers")
+            return value
+        return (float(value),) * W
+
+    def build(self, default_workers: int):
+        """The ``PSTopology`` (or ``TopologySchedule`` when drifting)."""
+        from repro.ps import PSTopology, asymmetric_link, uplink_degradation
+        W = self.workers
+        if W is None:
+            W = max(len(t) for t in (self.down_gbps, self.up_gbps,
+                                     self.worker_flops)
+                    if isinstance(t, tuple)) \
+                if any(isinstance(t, tuple)
+                       for t in (self.down_gbps, self.up_gbps,
+                                 self.worker_flops)) else default_workers
+        down = self._per_worker(self.down_gbps, W)
+        up = self._per_worker(self.up_gbps, W)
+        flops = self._per_worker(self.worker_flops, W)
+        base = PSTopology(
+            num_servers=self.servers,
+            links=tuple(asymmetric_link(d * 1e9, u * 1e9)
+                        for d, u in zip(down, up)),
+            worker_flops=flops)
+        if self.up_shift_factor is None:
+            return base
+        return uplink_degradation(base, factor=self.up_shift_factor,
+                                  at_epoch=self.shift_epoch)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """What the scheduler plans against, and how often it re-plans."""
+
+    strategy: str = "dynacomm"
+    reschedule_every: int = 20       # steps (sync) / pushes (async) per epoch
+    drift_detect: bool = False       # dynamic runtime: EWMA step-time drift
+    network: Optional[NetworkConfig] = None
+    topology: Optional[TopologyConfig] = None
+
+    def __post_init__(self):
+        if self.strategy not in _STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; choose "
+                             f"from {sorted(_STRATEGIES)}")
+        if self.reschedule_every < 1:
+            raise ValueError(f"reschedule_every must be >= 1, got "
+                             f"{self.reschedule_every}")
+        if self.network is not None and self.topology is not None:
+            raise ValueError("give either a network (ZeRO regimes) or a "
+                             "topology (PS regimes), not both")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How decided plans execute."""
+
+    regime: Optional[str] = None     # None ⇒ derived from the runtime name
+    staleness: Optional[int] = None  # ps-async bound k
+    throttle: str = "reject"         # ps-async: reject | wait
+    aggregate: bool = False          # wait throttle: BSP push aggregation
+    zero3: bool = False
+
+    def __post_init__(self):
+        if self.regime is not None and \
+                self.regime not in set(RUNTIME_REGIMES.values()):
+            raise ValueError(f"unknown regime {self.regime!r}; choose from "
+                             f"{sorted(set(RUNTIME_REGIMES.values()))}")
+        if self.throttle not in _THROTTLES:
+            raise ValueError(f"throttle must be one of {_THROTTLES}, got "
+                             f"{self.throttle!r}")
+        if self.staleness is not None and self.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {self.staleness}")
+        if self.aggregate and self.throttle != "wait":
+            raise ValueError("aggregate=True is the wait throttle's BSP "
+                             "mode; it cannot be combined with "
+                             f"throttle={self.throttle!r}")
+        if self.aggregate and self.staleness not in (None, 0):
+            raise ValueError(
+                f"aggregate=True admits workers in full-fleet cohorts, so "
+                f"staleness={self.staleness} would be inert (every commit "
+                f"lands at staleness 0) — set staleness to 0 or drop "
+                f"aggregation")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureConfig:
+    """Where fc/bc cost vectors come from."""
+
+    cost_source: str = "analytic"    # analytic | measured
+    remeasure_every: int = 1         # re-plan epochs between measurements
+    measure_iters: int = 3
+    measure_warmup: int = 1
+    compute_flops_per_s: float = 1e10   # analytic host rate (ZeRO regimes)
+
+    def __post_init__(self):
+        if self.cost_source not in _COST_SOURCES:
+            raise ValueError(f"cost_source must be one of {_COST_SOURCES}, "
+                             f"got {self.cost_source!r}")
+        if self.remeasure_every < 0:
+            raise ValueError(f"remeasure_every must be >= 0, got "
+                             f"{self.remeasure_every}")
+        if self.measure_iters < 1:
+            raise ValueError(f"measure_iters must be >= 1, got "
+                             f"{self.measure_iters}")
+        if self.measure_warmup < 0:
+            raise ValueError(f"measure_warmup must be >= 0, got "
+                             f"{self.measure_warmup}")
+        if self.compute_flops_per_s <= 0:
+            raise ValueError(f"compute_flops_per_s must be positive, got "
+                             f"{self.compute_flops_per_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """One complete, serializable description of a training run."""
+
+    runtime: str = "zero"
+    arch: str = "granite-3-2b"
+    reduced: bool = True
+    batch: int = 8
+    seq: int = 128
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    seed: int = 0
+    aux_weight: float = 0.01
+    schedule: ScheduleConfig = dataclasses.field(default_factory=ScheduleConfig)
+    execution: ExecutionConfig = dataclasses.field(
+        default_factory=ExecutionConfig)
+    measure: MeasureConfig = dataclasses.field(default_factory=MeasureConfig)
+
+    def __post_init__(self):
+        if self.runtime not in RUNTIME_REGIMES:
+            raise ValueError(f"unknown runtime {self.runtime!r}; choose "
+                             f"from {sorted(RUNTIME_REGIMES)}")
+        if self.optimizer not in ("adamw", "sgd"):
+            raise ValueError(f"optimizer must be 'adamw' or 'sgd', got "
+                             f"{self.optimizer!r}")
+        if self.batch < 1 or self.seq < 1:
+            raise ValueError(f"batch/seq must be >= 1, got "
+                             f"{self.batch}/{self.seq}")
+        regime = self.regime
+        if self.execution.regime is not None and \
+                self.execution.regime != regime:
+            raise ValueError(
+                f"execution.regime {self.execution.regime!r} contradicts "
+                f"runtime {self.runtime!r} (which is {regime!r}); leave "
+                f"regime unset to derive it")
+        # cross-block consistency: fail at construction, not at step 1
+        if regime != "ps-async":
+            if self.execution.staleness is not None:
+                raise ValueError(
+                    f"staleness={self.execution.staleness} is a bounded-"
+                    f"staleness (ps-async) knob; runtime {self.runtime!r} "
+                    f"is synchronous — use runtime='ps-async' or "
+                    f"'dynamic-ps-async'")
+            if self.execution.aggregate:
+                raise ValueError("aggregate=True is a ps-async knob; "
+                                 f"runtime {self.runtime!r} is synchronous")
+        if regime in ("zero", "local") and self.schedule.topology is not None:
+            raise ValueError(f"runtime {self.runtime!r} plans against a "
+                             f"scalar network, not a PS topology — drop "
+                             f"schedule.topology or pick a ps-* runtime")
+        if regime.startswith("ps") and self.schedule.network is not None:
+            raise ValueError(f"runtime {self.runtime!r} plans against a PS "
+                             f"topology, not a scalar network — drop "
+                             f"schedule.network or pick a zero/dynamic "
+                             f"runtime")
+        if self.runtime == "zero" and self.schedule.network is not None \
+                and self.schedule.network.shift_gbps is not None:
+            raise ValueError("a bandwidth shift needs the run-time loop to "
+                             "react to it — use runtime='dynamic' (the "
+                             "'zero' runtime plans once at startup)")
+        if self.runtime in ("ps", "ps-async") and \
+                self.schedule.topology is not None and \
+                self.schedule.topology.up_shift_factor is not None:
+            raise ValueError("an uplink drift needs the run-time loop to "
+                             "react to it — use runtime='dynamic-ps' or "
+                             f"'dynamic-ps-async' (the {self.runtime!r} "
+                             f"runtime plans once at startup)")
+        if self.schedule.drift_detect and self.runtime != "dynamic":
+            raise ValueError("drift_detect re-schedules from observed step "
+                             "times, which only the 'dynamic' runtime "
+                             f"supports (got runtime {self.runtime!r})")
+        if self.measure.cost_source == "measured" and \
+                self.runtime not in ("dynamic", "dynamic-ps"):
+            raise ValueError("cost_source='measured' times the compiled "
+                             "per-layer applies, which the dynamic sync "
+                             "runtimes do (runtime 'dynamic' or "
+                             f"'dynamic-ps'; got {self.runtime!r})")
+
+    # ------------------------------------------------------------------
+    # derived views
+    # ------------------------------------------------------------------
+
+    @property
+    def regime(self) -> str:
+        """The execution regime the runtime name implies."""
+        return RUNTIME_REGIMES[self.runtime]
+
+    @property
+    def is_dynamic(self) -> bool:
+        return self.runtime in DYNAMIC_RUNTIMES
+
+    def build_optimizer(self):
+        from repro.optim import adamw, sgd
+        return adamw(self.lr) if self.optimizer == "adamw" \
+            else sgd(self.lr, 0.9)
+
+    # ------------------------------------------------------------------
+    # JSON round-trip
+    # ------------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, *, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, obj: dict) -> "RuntimeConfig":
+        obj = dict(obj)
+
+        def sub(key, typ):
+            val = obj.get(key)
+            if isinstance(val, dict):
+                obj[key] = typ(**val)
+
+        sched = obj.get("schedule")
+        if isinstance(sched, dict):
+            sched = dict(sched)
+            for key, typ in (("network", NetworkConfig),
+                             ("topology", TopologyConfig)):
+                if isinstance(sched.get(key), dict):
+                    sched[key] = typ(**sched[key])
+            obj["schedule"] = ScheduleConfig(**sched)
+        sub("execution", ExecutionConfig)
+        sub("measure", MeasureConfig)
+        unknown = set(obj) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown RuntimeConfig fields "
+                             f"{sorted(unknown)}")
+        return cls(**obj)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RuntimeConfig":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "RuntimeConfig":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -1,0 +1,63 @@
+"""The composable ``Trainer`` protocol every runtime implements.
+
+One interface over all execution regimes — bucketed ZeRO, synchronous PS,
+bounded-staleness async PS, and their dynamic (re-planning) variants — so
+launchers, examples, and benchmarks drive any of them identically:
+
+* ``fit(steps)`` — run ``steps`` units of progress (training steps for
+  the synchronous regimes, accepted gradient pushes for the asynchronous
+  ones) against the configured data source; returns one loss per unit;
+* ``step(batch)`` — one unit of progress on an explicit batch (async
+  regimes feed ``batch`` to every worker attempt until the next push
+  commits);
+* ``events`` — the ``RescheduleEvent`` history (empty for static
+  regimes);
+* ``timeline()`` — the regime's simulator view of the active plan
+  (``IterationTimeline`` / ``PSTimeline`` for synchronous regimes, the
+  cumulative ``AsyncRunLog`` for asynchronous ones; ``None`` where no
+  plan exists, e.g. the local regime);
+* ``ledger`` — cumulative transfer accounting as a plain dict
+  (``pull_bytes``/``push_bytes``/``num_pulls``/``num_pushes`` + regime
+  extras), uniform across the mesh-collective and server-mediated paths;
+* ``save_state(path)`` / ``restore_state(path)`` — checkpoint the model
+  (and, for dynamic regimes, the re-planning loop bookkeeping) through
+  ``repro.checkpoint``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Protocol, Sequence, \
+    runtime_checkable
+
+
+@runtime_checkable
+class Trainer(Protocol):
+    """Uniform driver interface over every registered runtime."""
+
+    def fit(self, steps: int) -> List[float]:
+        """Run ``steps`` units of progress; one loss per unit."""
+        ...
+
+    def step(self, batch: Any) -> float:
+        """One unit of progress on an explicit batch."""
+        ...
+
+    @property
+    def events(self) -> Sequence[Any]:
+        """Re-scheduling history (empty for static regimes)."""
+        ...
+
+    def timeline(self) -> Optional[Any]:
+        """The regime's simulator/log view of the active plan."""
+        ...
+
+    @property
+    def ledger(self) -> Dict[str, Any]:
+        """Cumulative transfer accounting."""
+        ...
+
+    def save_state(self, path: str) -> None:
+        ...
+
+    def restore_state(self, path: str) -> None:
+        ...

@@ -1,0 +1,657 @@
+"""The repro.runtime layer: config round-trips, the registry, the Trainer
+protocol over every regime, deprecation shims, BSP push aggregation, and
+measured per-worker PS costs (ISSUE 5).
+
+Every registered runtime is built from its checked-in smoke config
+(``examples/runtime_configs/*.json``) and driven single-device; invalid
+config combinations must fail at construction with clear ValueErrors.
+"""
+
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (ExecutionConfig, MeasureConfig, NetworkConfig,
+                           RuntimeConfig, ScheduleConfig, TopologyConfig,
+                           Trainer, build_runtime, runtime_names)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SMOKE_DIR = os.path.join(REPO, "examples", "runtime_configs")
+
+SMOKE = dict(batch=2, seq=16, reduced=True)
+
+
+def smoke_config_paths():
+    paths = sorted(glob.glob(os.path.join(SMOKE_DIR, "*.json")))
+    assert paths, f"no smoke configs under {SMOKE_DIR}"
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# config: JSON round-trip + validation
+# ---------------------------------------------------------------------------
+
+
+class TestRuntimeConfig:
+    def test_every_smoke_config_round_trips(self):
+        names = set()
+        for path in smoke_config_paths():
+            c = RuntimeConfig.load(path)
+            assert RuntimeConfig.from_json(c.to_json()) == c, path
+            names.add(c.runtime)
+        # one smoke config per registered runtime
+        assert names == set(runtime_names())
+
+    def test_nested_heterogeneous_round_trip(self):
+        c = RuntimeConfig(
+            runtime="ps-async", **SMOKE,
+            execution=ExecutionConfig(staleness=0, throttle="wait",
+                                      aggregate=True),
+            schedule=ScheduleConfig(topology=TopologyConfig(
+                servers=3, workers=4, down_gbps=(10.0, 10.0, 2.5, 2.5),
+                up_gbps=(1.0, 1.0, 0.25, 0.25),
+                worker_flops=(4e10, 4e10, 1e10, 1e10))),
+            measure=MeasureConfig(remeasure_every=3))
+        again = RuntimeConfig.from_json(c.to_json())
+        assert again == c
+        assert again.schedule.topology.down_gbps == (10.0, 10.0, 2.5, 2.5)
+
+    def test_from_dict_and_json_string_inputs(self):
+        c = RuntimeConfig(runtime="zero", **SMOKE)
+        assert build_runtime is not None
+        assert RuntimeConfig.from_dict(c.to_dict()) == c
+
+    def test_unknown_runtime_rejected(self):
+        with pytest.raises(ValueError, match="unknown runtime"):
+            RuntimeConfig(runtime="psychic")
+
+    def test_unknown_top_level_field_rejected(self):
+        with pytest.raises(ValueError, match="unknown RuntimeConfig"):
+            RuntimeConfig.from_dict({"runtime": "zero", "warp": 9})
+
+    def test_staleness_on_sync_runtime_rejected(self):
+        with pytest.raises(ValueError, match="staleness"):
+            RuntimeConfig(runtime="zero",
+                          execution=ExecutionConfig(staleness=1))
+        with pytest.raises(ValueError, match="staleness"):
+            RuntimeConfig(runtime="ps",
+                          execution=ExecutionConfig(staleness=1))
+
+    def test_aggregate_needs_wait_throttle(self):
+        with pytest.raises(ValueError, match="wait"):
+            ExecutionConfig(throttle="reject", aggregate=True)
+
+    def test_aggregate_rejects_inert_staleness(self):
+        """Cohort admission makes k inert under aggregation — a non-zero
+        bound is a configuration the runtime would silently ignore."""
+        with pytest.raises(ValueError, match="inert"):
+            ExecutionConfig(throttle="wait", aggregate=True, staleness=2)
+
+    def test_aggregate_on_sync_runtime_rejected(self):
+        with pytest.raises(ValueError, match="aggregate"):
+            RuntimeConfig(runtime="dynamic-ps",
+                          execution=ExecutionConfig(throttle="wait",
+                                                    aggregate=True))
+
+    def test_topology_on_zero_regime_rejected(self):
+        with pytest.raises(ValueError, match="topology"):
+            RuntimeConfig(runtime="dynamic",
+                          schedule=ScheduleConfig(topology=TopologyConfig()))
+
+    def test_network_on_ps_regime_rejected(self):
+        with pytest.raises(ValueError, match="network"):
+            RuntimeConfig(runtime="ps",
+                          schedule=ScheduleConfig(network=NetworkConfig()))
+
+    def test_drift_on_static_runtime_needs_dynamic(self):
+        with pytest.raises(ValueError, match="dynamic"):
+            RuntimeConfig(runtime="zero",
+                          schedule=ScheduleConfig(
+                              network=NetworkConfig(shift_gbps=1.0)))
+        with pytest.raises(ValueError, match="dynamic-ps"):
+            RuntimeConfig(runtime="ps",
+                          schedule=ScheduleConfig(
+                              topology=TopologyConfig(up_shift_factor=4.0)))
+
+    def test_drift_detect_only_on_dynamic(self):
+        with pytest.raises(ValueError, match="drift_detect"):
+            RuntimeConfig(runtime="zero",
+                          schedule=ScheduleConfig(drift_detect=True))
+
+    def test_measured_only_on_dynamic_sync(self):
+        with pytest.raises(ValueError, match="measured"):
+            RuntimeConfig(runtime="zero",
+                          measure=MeasureConfig(cost_source="measured"))
+
+    def test_regime_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="contradicts"):
+            RuntimeConfig(runtime="zero",
+                          execution=ExecutionConfig(regime="ps-sync"))
+
+    def test_network_and_topology_mutually_exclusive(self):
+        with pytest.raises(ValueError, match="not both"):
+            ScheduleConfig(network=NetworkConfig(),
+                           topology=TopologyConfig())
+
+    def test_regime_and_is_dynamic_views(self):
+        c = RuntimeConfig(runtime="dynamic-ps-async",
+                          execution=ExecutionConfig(staleness=1))
+        assert c.regime == "ps-async" and c.is_dynamic
+        assert not RuntimeConfig(runtime="ps").is_dynamic
+
+    def test_per_worker_length_mismatch_rejected_at_build(self):
+        topo = TopologyConfig(workers=3, up_gbps=(1.0, 2.0))
+        with pytest.raises(ValueError, match="per-worker"):
+            topo.build(default_workers=3)
+
+    def test_validation_of_scalars(self):
+        for bad in (dict(bandwidth_gbps=0), dict(shift_gbps=-1.0)):
+            with pytest.raises(ValueError):
+                NetworkConfig(**bad)
+        for bad in (dict(servers=0), dict(workers=0),
+                    dict(up_shift_factor=0.0)):
+            with pytest.raises(ValueError):
+                TopologyConfig(**bad)
+        for bad in (dict(cost_source="psychic"), dict(remeasure_every=-1),
+                    dict(measure_iters=0), dict(measure_warmup=-1),
+                    dict(compute_flops_per_s=0)):
+            with pytest.raises(ValueError):
+                MeasureConfig(**bad)
+        with pytest.raises(ValueError, match="strategy"):
+            ScheduleConfig(strategy="psychic")
+        with pytest.raises(ValueError, match="reschedule_every"):
+            ScheduleConfig(reschedule_every=0)
+        with pytest.raises(ValueError, match="throttle"):
+            ExecutionConfig(throttle="drop")
+        with pytest.raises(ValueError, match="optimizer"):
+            RuntimeConfig(runtime="zero", optimizer="lion")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_all_runtimes_registered(self):
+        assert runtime_names() == ("dynamic", "dynamic-ps",
+                                   "dynamic-ps-async", "local", "ps",
+                                   "ps-async", "zero")
+
+    def test_register_unknown_name_rejected(self):
+        from repro.runtime.registry import register_runtime
+        with pytest.raises(ValueError, match="not a known name"):
+            register_runtime("warp-speed")
+
+    def test_duplicate_registration_rejected(self):
+        from repro.runtime.registry import register_runtime
+        runtime_names()                 # force adapter registration first
+        with pytest.raises(ValueError, match="twice"):
+            register_runtime("zero")(object)
+
+    def test_bad_config_type_rejected(self):
+        with pytest.raises(TypeError, match="config"):
+            build_runtime(42)
+
+    def test_bad_data_type_rejected(self):
+        with pytest.raises(TypeError, match="data"):
+            build_runtime(RuntimeConfig(runtime="local", **SMOKE), data=42)
+
+
+# ---------------------------------------------------------------------------
+# every registered runtime builds from its JSON smoke config and runs
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Lazily built runtimes, one per smoke config, shared module-wide."""
+    cache = {}
+
+    def get(runtime_name):
+        if runtime_name not in cache:
+            (path,) = [p for p in smoke_config_paths()
+                       if RuntimeConfig.load(p).runtime == runtime_name]
+            cache[runtime_name] = (build_runtime(RuntimeConfig.load(path)),
+                                   path)
+        return cache[runtime_name]
+
+    return get
+
+
+LEDGER_KEYS = {"pull_bytes", "push_bytes", "num_pulls", "num_pushes"}
+
+
+class TestEveryRuntime:
+    @pytest.mark.parametrize("name", ["local", "zero", "ps", "ps-async",
+                                      "dynamic", "dynamic-ps",
+                                      "dynamic-ps-async"])
+    def test_builds_from_json_and_steps(self, built, name):
+        rt, path = built(name)
+        assert isinstance(rt, Trainer), f"{name} breaks the protocol"
+        losses = rt.fit(2)
+        assert len(losses) >= 2 and all(np.isfinite(losses))
+        assert LEDGER_KEYS <= set(rt.ledger)
+        assert isinstance(rt.config, RuntimeConfig)
+        assert rt.config == RuntimeConfig.load(path)   # config preserved
+
+    def test_dynamic_runtimes_reschedule_and_resegment(self, built):
+        for name in ("dynamic", "dynamic-ps"):
+            rt, _ = built(name)
+            total = rt._data_idx
+            rt.fit(4 - min(total, 4))           # reach the shift boundary
+            assert len(rt.events) >= 2, name
+            assert any(e.plan_changed for e in rt.events), \
+                f"{name}: scripted drift must re-segment the plan"
+            assert rt.timeline() is not None
+
+    def test_zero_and_ps_share_one_loss_trajectory(self, built):
+        """zero and ps run the same compute path (PSTrainer delegates to
+        the ZeRO step) on the same data stream — losses are bit-identical
+        even though their plans were derived from different cost models
+        (losses are plan-independent, the test_dist invariant)."""
+        l_zero = built("zero")[0].fit(1)[0]
+        l_ps = built("ps")[0].fit(1)[0]
+        assert l_zero == l_ps
+
+    def test_ledger_accumulates(self, built):
+        rt, _ = built("zero")
+        before = rt.ledger["push_bytes"]
+        rt.fit(1)
+        after = rt.ledger["push_bytes"]
+        assert after > before
+        per_iter = after - before
+        tb = rt.trainer
+        from repro.dist.collectives import bucket_bytes
+        want = sum(bucket_bytes(tb.specs, b) for b in tb.plan.backward) * \
+            tb.axis_size
+        assert per_iter == want
+
+    def test_async_events_and_timeline(self, built):
+        rt, _ = built("dynamic-ps-async")
+        assert rt.timeline() is not None           # the cumulative log
+        assert all(hasattr(e, "worker_plans") for e in rt.events)
+
+    def test_step_with_explicit_batch(self, built):
+        rt, _ = built("local")
+        from repro.data.pipeline import SyntheticText
+        pipe = SyntheticText(rt.arch.vocab_size, rt.config.seq,
+                             rt.config.batch, seed=3)
+        loss = rt.step(pipe.batch(0))
+        assert np.isfinite(loss)
+
+
+class TestSaveRestore:
+    def test_dynamic_ps_resume_is_bit_identical(self, tmp_path):
+        config = RuntimeConfig(
+            runtime="dynamic-ps", **SMOKE,
+            schedule=ScheduleConfig(reschedule_every=2,
+                                    topology=TopologyConfig(
+                                        servers=2, up_shift_factor=10.0,
+                                        shift_epoch=1)))
+        ref = build_runtime(config)
+        ref_losses = ref.fit(6)
+        a = build_runtime(config)
+        first = a.fit(3)                          # stop mid-epoch
+        path = str(tmp_path / "rt.npz")
+        a.save_state(path)
+        b = build_runtime(config)
+        b.restore_state(path)
+        rest = b.fit(3)
+        assert first + rest == ref_losses
+        # resume replays the same re-schedule history
+        assert [(e.step, e.epoch, e.plan) for e in b.events] == \
+            [(e.step, e.epoch, e.plan) for e in ref.events]
+
+    def test_wrong_runtime_checkpoint_rejected(self, tmp_path, built):
+        rt, _ = built("local")
+        path = str(tmp_path / "local.npz")
+        rt.save_state(path)
+        other = built("zero")[0]
+        with pytest.raises(ValueError, match="written by runtime"):
+            other.restore_state(path)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old import paths + old hand-wired construction
+# ---------------------------------------------------------------------------
+
+
+class TestDeprecationShims:
+    def test_moved_classes_warn_and_alias(self):
+        import repro.dist.dynamic as dd
+        from repro.runtime import replan
+        for name in ("PlanStepCache", "RescheduleEvent"):
+            with pytest.deprecated_call(match="moved to"):
+                cls = getattr(dd, name)
+            assert cls is getattr(replan, name)
+
+    def test_unknown_attribute_still_raises(self):
+        import repro.dist.dynamic as dd
+        with pytest.raises(AttributeError):
+            dd.does_not_exist
+
+    def test_old_style_construction_matches_factory_losses(self, built):
+        """The pre-registry wiring (hand-built DynamicTrainer, the old
+        launch/train.py path) must produce losses bit-identical to the
+        factory-built runtime on the same config."""
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.core import bandwidth_shift
+        from repro.data.pipeline import SyntheticText
+        from repro.dist.dynamic import DynamicTrainer
+        from repro.optim import adamw
+
+        rt, path = built("dynamic")
+        config = RuntimeConfig.load(path)
+        cfg = get_config(config.arch).reduced()
+        mesh = Mesh(np.array(jax.devices()).reshape(len(jax.devices()),),
+                    ("data",))
+        net_cfg = config.schedule.network
+        old = DynamicTrainer(
+            cfg=cfg, mesh=mesh, optimizer=adamw(config.lr),
+            network=bandwidth_shift(net_cfg.bandwidth_gbps * 1e9,
+                                    net_cfg.shift_gbps * 1e9,
+                                    at_epoch=net_cfg.shift_epoch),
+            steps_per_epoch=config.schedule.reschedule_every,
+            strategy=config.schedule.strategy,
+            input_shape=rt.shape,
+            compute_flops_per_s=config.measure.compute_flops_per_s)
+        state = old.init_state(jax.random.PRNGKey(config.seed))
+        pipe = SyntheticText(cfg.vocab_size, config.seq, config.batch,
+                             seed=config.seed)
+        _, old_losses = old.run(state, pipe.batch, 4)
+        new = build_runtime(config)             # fresh, same config
+        assert new.fit(4) == old_losses
+
+
+# ---------------------------------------------------------------------------
+# SSP wait-throttle BSP aggregation (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _cnn_loss(layers, batch):
+    from repro.models.cnn import small_cnn_loss
+    return small_cnn_loss({"layers": layers}, batch["images"],
+                          batch["labels"])
+
+
+def _fixed_batch(*_):
+    r = np.random.default_rng(7)
+    return {"images": jnp.asarray(r.normal(size=(8, 32, 32, 3)),
+                                  jnp.float32),
+            "labels": jnp.asarray(r.integers(0, 10, size=(8,)), jnp.int32)}
+
+
+def _worker_batch(w, i):
+    r = np.random.default_rng(100003 * w + i)
+    return {"images": jnp.asarray(r.normal(size=(8, 32, 32, 3)),
+                                  jnp.float32),
+            "labels": jnp.asarray(r.integers(0, 10, size=(8,)), jnp.int32)}
+
+
+def _agg_trainer(workers, *, aggregate, k=0, throttle="wait"):
+    from repro.core import plan_from_decision
+    from repro.models.cnn import small_cnn_init
+    from repro.optim import sgd
+    from repro.ps import AsyncPSTrainer, PSTopology, asymmetric_link
+    params = small_cnn_init(jax.random.PRNGKey(0))
+    L = len(params["layers"])
+    plan = plan_from_decision(((1, 3), (4, L)), ((4, L), (1, 3)), L)
+    topo = PSTopology(
+        num_servers=2,
+        links=tuple(asymmetric_link(10e9, 1e9) for _ in range(workers)),
+        worker_flops=(1e10,) * workers)
+    return AsyncPSTrainer(init_layers=params["layers"], loss_fn=_cnn_loss,
+                          optimizer=sgd(0.05), topology=topo, plan=plan,
+                          staleness=k, throttle=throttle,
+                          aggregate=aggregate)
+
+
+class TestBSPAggregation:
+    def test_k0_aggregate_is_true_bsp(self):
+        """k=0 wait+aggregate: one version bump per round of W pushes,
+        zero staleness, nothing rejected, and — with identical per-worker
+        data — losses bit-identical to the serialized single-worker run
+        (aggregating W identical gradients and dividing by W is exact)."""
+        agg = _agg_trainer(4, aggregate=True).run(12, _fixed_batch)
+        solo = _agg_trainer(1, aggregate=False).run(3, _fixed_batch)
+        heads = [e.result.version for e in agg.events]
+        assert heads == [v for v in (1, 2, 3) for _ in range(4)]
+        assert agg.max_staleness == 0
+        assert agg.num_rejected == 0
+        rounds = [agg.losses[i * 4:(i + 1) * 4] for i in range(3)]
+        assert all(len(set(r)) == 1 for r in rounds), \
+            "a BSP round sees one shared parameter version"
+        assert [r[0] for r in rounds] == solo.losses
+
+    def test_aggregate_distinct_batches_matches_host_bsp(self):
+        """With distinct per-worker batches the aggregated trajectory is
+        bit-identical to a hand-rolled BSP loop using the same grad_fn,
+        flatten order, and mean (worker order, sum then divide)."""
+        from repro.dist.collectives import flatten_tree, unflatten_tree
+        tr = _agg_trainer(2, aggregate=True)
+        log = tr.run(6, _worker_batch)           # 3 rounds of 2
+        ref = _agg_trainer(2, aggregate=False)   # fresh server, same init
+        sv, gf = ref.server, ref._grad_fn
+        ref_losses = []
+        for rnd in range(3):
+            layers = [unflatten_tree(f, s)
+                      for f, s in zip(sv.flats(), ref.specs)]
+            pushes, losses = [], []
+            for w in range(2):
+                loss, grads = gf(layers, _worker_batch(w, rnd))
+                losses.append(float(loss))
+                full = {l: flatten_tree(grads[l], ref.specs[l])
+                        for l in range(len(ref.specs))}
+                pushes.append((w, rnd, full))
+            sv.push_aggregated(pushes)
+            ref_losses.extend(losses)
+        assert log.losses == ref_losses
+
+    def test_k0_aggregate_tracks_sync_ps_trainer(self):
+        """The satellite's anchor: k=0 wait+aggregate with every worker
+        on the full batch follows the synchronous PSTrainer on the same
+        batch.  Comparison is to fp32 roundoff, not bitwise: PSTrainer's
+        per-layer-VJP backward and the async whole-graph autodiff round
+        differently (the documented ZeRO-vs-reference gap) — bit-identity
+        is asserted against same-compute-path references above."""
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.core.buckets import BucketPlan
+        from repro.models import (init_params, num_sched_layers,
+                                  params_from_sched_layers,
+                                  sched_layer_trees, train_loss)
+        from repro.optim import sgd
+        from repro.ps import AsyncPSTrainer, PSTopology, PSTrainer
+
+        cfg = get_config("granite-3-2b").reduced()
+        Ls = num_sched_layers(cfg)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        plan = BucketPlan(forward=(tuple(range(Ls)),),
+                          backward=(tuple(range(Ls - 1, -1, -1)),))
+        sync = PSTrainer(cfg=cfg, mesh=mesh, plan=plan,
+                         optimizer=sgd(0.05),
+                         topology=PSTopology.uniform(2, 1))
+        state = sync.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(sync.build_train_step())
+        key = jax.random.PRNGKey(3)
+        toks = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+        sync_losses = []
+        for _ in range(3):
+            state, loss = step(state, batch)
+            sync_losses.append(float(loss))
+
+        layers = sched_layer_trees(init_params(cfg, jax.random.PRNGKey(0)))
+
+        def loss_fn(ls, b):
+            return train_loss(cfg, params_from_sched_layers(ls), b,
+                              aux_weight=0.01)
+
+        atr = AsyncPSTrainer(init_layers=layers, loss_fn=loss_fn,
+                             optimizer=sgd(0.05),
+                             topology=PSTopology.uniform(2, 4),
+                             plan=plan, staleness=0, throttle="wait",
+                             aggregate=True)
+        log = atr.run(12, lambda w, i: batch)    # 3 BSP rounds of 4
+        round_losses = [log.losses[i * 4] for i in range(3)]
+        np.testing.assert_allclose(round_losses, sync_losses, rtol=2e-5)
+
+    def test_aggregate_requires_wait_throttle(self):
+        with pytest.raises(ValueError, match="wait"):
+            _agg_trainer(2, aggregate=True, throttle="reject")
+
+    def test_aggregate_heterogeneous_fleet_still_lockstep(self):
+        """Slower workers gate the round (BSP semantics): everyone
+        contributes exactly once per round, fast workers accumulate
+        barrier wait."""
+        from repro.core import plan_from_decision
+        from repro.models.cnn import small_cnn_init
+        from repro.optim import sgd
+        from repro.ps import AsyncPSTrainer, PSTopology, asymmetric_link
+        params = small_cnn_init(jax.random.PRNGKey(0))
+        L = len(params["layers"])
+        plan = plan_from_decision(((1, L),), ((1, L),), L)
+        topo = PSTopology(
+            num_servers=1,
+            links=tuple(asymmetric_link(10e9, 1e9) for _ in range(3)),
+            worker_flops=(4e10, 4e10, 1e10))
+        tr = AsyncPSTrainer(init_layers=params["layers"],
+                            loss_fn=_cnn_loss, optimizer=sgd(0.05),
+                            topology=topo, plan=plan, staleness=0,
+                            throttle="wait", aggregate=True)
+        log = tr.run(9, _worker_batch)
+        assert log.accepted_by_worker() == {0: 3, 1: 3, 2: 3}
+        assert log.max_staleness == 0
+        assert log.total_wait_s > 0              # fast workers blocked
+        assert log.num_rejected == 0
+
+    def test_server_push_aggregated_validation(self):
+        from repro.ps.server import PSServer
+        from repro.dist.collectives import make_flat_spec, flatten_tree
+        from repro.optim import sgd
+        from repro.ps import PSTopology
+        trees = [{"w": jnp.arange(4, dtype=jnp.float32)} for _ in range(2)]
+        specs = [make_flat_spec(t, 1) for t in trees]
+        flats = [flatten_tree(t, s) for t, s in zip(trees, specs)]
+        sv = PSServer(specs, PSTopology.uniform(1, 2), sgd(0.1), flats,
+                      staleness_bound=0)
+        g = {l: jnp.ones((specs[l].padded,), jnp.float32)
+             for l in range(2)}
+        with pytest.raises(ValueError, match="empty"):
+            sv.push_aggregated([])
+        with pytest.raises(ValueError, match="one version"):
+            sv.push_aggregated([(0, 0, g), (1, 1, g)])
+        with pytest.raises(ValueError, match="lacks"):
+            sv.push_aggregated([(0, 0, {0: g[0]})])
+        res = sv.push_aggregated([(0, 0, g), (1, 0, g)])
+        assert [r.accepted for r in res] == [True, True]
+        assert sv.version == 1                   # one bump for the group
+        # stale group: rejected atomically
+        res = sv.push_aggregated([(0, 0, g)])
+        assert not res[0].accepted and sv.ledger.rejected_pushes == 1
+
+
+# ---------------------------------------------------------------------------
+# measured per-worker fc/bc in the PS regime (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestMeasuredPSCosts:
+    def test_topology_costs_measured_scales_per_worker(self):
+        from repro.core.profiler import LayerProfile
+        from repro.ps import PSTopology
+        topo = PSTopology(num_servers=1,
+                          links=PSTopology.uniform(1, 2).links,
+                          worker_flops=(2e10, 5e9))
+        profiles = [LayerProfile(name=f"l{i}", param_bytes=1e6,
+                                 flops_fwd=1e9) for i in range(3)]
+        fc = np.array([1e-3, 2e-3, 3e-3])
+        bc = 2 * fc
+        costs = topo.topology_costs_measured(profiles, fc=fc, bc=bc)
+        # ref = fastest worker (2e10): its fc is the measurement as-is
+        np.testing.assert_allclose(costs.workers[0].fc, fc)
+        # the 4x-slower worker sees 4x the measured times
+        np.testing.assert_allclose(costs.workers[1].fc, 4 * fc)
+        np.testing.assert_allclose(costs.workers[1].bc, 4 * bc)
+        # transmission still per-link analytic
+        assert costs.workers[0].dt_push == topo.links[0].up.dt
+
+    def test_topology_costs_measured_validation(self):
+        from repro.core.profiler import LayerProfile
+        from repro.ps import PSTopology
+        topo = PSTopology.uniform(1, 1)
+        profiles = [LayerProfile(name="l", param_bytes=1e6, flops_fwd=1e9)]
+        with pytest.raises(ValueError, match="one entry per layer"):
+            topo.topology_costs_measured(profiles, fc=[1e-3, 2e-3],
+                                         bc=[1e-3, 2e-3])
+        with pytest.raises(ValueError, match="ref_flops"):
+            topo.topology_costs_measured(profiles, fc=[1e-3], bc=[1e-3],
+                                         ref_flops=0.0)
+
+    def test_dynamic_ps_measured_remeasures_on_schedule(self):
+        """remeasure_every threads into DynamicPSTrainer the way the
+        ZeRO-side DynamicTrainer already re-measures."""
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.data.pipeline import SyntheticText
+        from repro.optim import adamw
+        from repro.ps import DynamicPSTrainer, PSTopology
+
+        cfg = get_config("granite-3-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        pipe = SyntheticText(cfg.vocab_size, 16, 2, seed=0)
+        dyn = DynamicPSTrainer(
+            cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
+            topology=PSTopology.uniform(2, 1),
+            steps_per_epoch=2, input_shape=InputShape("m", 16, 2, "train"),
+            cost_source="measured", remeasure_every=2,
+            measure_iters=1, measure_warmup=0)
+        state = dyn.init_state(jax.random.PRNGKey(0))
+        state, losses = dyn.run(state, pipe.batch, 6)
+        assert len(losses) == 6
+        # epochs 0,1,2 re-planned; measurement at 0, re-measured at 2
+        assert [e.epoch for e in dyn.events] == [0, 1, 2]
+        assert dyn._measured_epoch == 2
+        # the cached measurement feeds the cost projection
+        costs = dyn.costs_for_epoch(0)
+        np.testing.assert_allclose(np.asarray(costs.workers[0].fc),
+                                   np.asarray(dyn._measured_fc_bc[0]))
+
+    def test_measured_first_projection_needs_state_and_batch(self):
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.optim import adamw
+        from repro.ps import DynamicPSTrainer, PSTopology
+        cfg = get_config("granite-3-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        dyn = DynamicPSTrainer(
+            cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
+            topology=PSTopology.uniform(2, 1), steps_per_epoch=2,
+            input_shape=InputShape("m", 16, 2, "train"),
+            cost_source="measured")
+        with pytest.raises(ValueError, match="state and batch"):
+            dyn.costs_for_epoch(0)
+
+    def test_validation(self):
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.optim import adamw
+        from repro.ps import DynamicPSTrainer, PSTopology
+        cfg = get_config("granite-3-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        kw = dict(cfg=cfg, mesh=mesh, optimizer=adamw(1e-3),
+                  topology=PSTopology.uniform(2, 1), steps_per_epoch=2,
+                  input_shape=InputShape("m", 16, 2, "train"))
+        with pytest.raises(ValueError, match="cost_source"):
+            DynamicPSTrainer(cost_source="psychic", **kw)
+        with pytest.raises(ValueError, match="remeasure_every"):
+            DynamicPSTrainer(remeasure_every=-1, **kw)
