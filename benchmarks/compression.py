@@ -1,0 +1,146 @@
+"""Compressed push-pull benchmarks (``repro.compress``).
+
+Two benches, published together by CI as ``BENCH_compression.json``:
+
+* ``compression_planning`` — how compressed gradient pushes re-shape the
+  DP decomposition: per paper CNN and scheme (none / int8 / top-k), the
+  consensus plan's segment counts, straggler makespan, and per-iteration
+  push wire bytes over an edge fleet behind slow asymmetric uplinks.
+  Shrinking gt makes the per-transmission Δt overhead relatively more
+  expensive, so the DP merges pushes into fewer, larger segments *and*
+  the makespan drops — the cost model and the wire savings compose.
+* ``compression_training`` — the accuracy side: the smoke CNN driven
+  through the bounded-staleness async PS loop under each scheme (error
+  feedback on), reporting final loss vs the fp32 baseline, cumulative
+  push wire bytes, and the measured ledger compression ratio.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+MODELS = ("vgg19", "googlenet", "inception-v4", "resnet152")
+SCHEMES = (("none", None), ("int8", None), ("topk", 0.01))
+
+
+def _edge_topology(workers: int = 4):
+    """Heterogeneous edge fleet: 100 Mbps uplinks behind a 50 ms RTT +
+    50 ms setup, half the workers at half compute.  In this regime the
+    fp32 plan segments finely to hide the huge pushes; compressed gt is
+    small enough that the per-transmission Δt dominates, so the DP merges
+    backward segments (e.g. resnet152: 5 → 4 at int8, 5 → 3 at top-k)
+    while the makespan still drops 14–52%."""
+    from repro.ps import PSTopology, asymmetric_link
+    return PSTopology(
+        num_servers=2,
+        links=tuple(asymmetric_link(2e9, 0.1e9, rtt_s=0.05, setup_s=0.05)
+                    for _ in range(workers)),
+        worker_flops=tuple(2e11 if w < workers // 2 else 1e11
+                           for w in range(workers)))
+
+
+def _compressor(scheme, fraction):
+    from repro.compress import make_compressor
+    return None if scheme == "none" else make_compressor(
+        scheme, topk_fraction=fraction)
+
+
+def compression_planning() -> List[Dict]:
+    """Consensus plan + makespan + wire bytes per model and scheme."""
+    from repro.core import consensus_decision
+    from repro.models.cnn import PAPER_CNNS
+
+    topo = _edge_topology()
+    rows = []
+    for model in MODELS:
+        profiles = PAPER_CNNS[model](batch=32)
+        logical = sum(p.param_bytes for p in profiles)
+        base_makespan = base_bwd = None
+        for scheme, fraction in SCHEMES:
+            comp = _compressor(scheme, fraction)
+            costs = topo.topology_costs(profiles, compressor=comp)
+            decision, makespan = consensus_decision(costs, "dynacomm")
+            if scheme == "none":
+                base_makespan, base_bwd = makespan, len(decision[1])
+            wire = logical if comp is None else float(
+                sum(float(comp.wire_bytes(p.param_bytes)) for p in profiles)
+                + comp.segment_overhead_bytes * len(decision[1]))
+            rows.append({
+                "model": model, "scheme": scheme,
+                "fwd_segments": len(decision[0]),
+                "bwd_segments": len(decision[1]),
+                "bwd_coarser_than_fp32": len(decision[1]) < base_bwd,
+                "sync_makespan_s": round(makespan, 4),
+                "makespan_vs_fp32_pct": round(
+                    100 * (1 - makespan / base_makespan), 2),
+                "push_logical_mb": round(logical / 1e6, 2),
+                "push_wire_mb": round(wire / 1e6, 2),
+                "wire_ratio": round(logical / wire, 2),
+            })
+    return rows
+
+
+def compression_training() -> List[Dict]:
+    """Async PS smoke-CNN training under each scheme (error feedback)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import plan_from_decision
+    from repro.models.cnn import small_cnn_init, small_cnn_loss
+    from repro.optim import sgd
+    from repro.ps import AsyncPSTrainer, PSTopology, asymmetric_link
+
+    topo = PSTopology(
+        num_servers=2,
+        links=tuple(asymmetric_link(10e9, 1e9) for _ in range(3)),
+        worker_flops=(1e10,) * 3)
+
+    def loss_fn(layers, batch):
+        return small_cnn_loss({"layers": layers}, batch["images"],
+                              batch["labels"])
+
+    def batch_fn(w, i):
+        r = np.random.default_rng(100003 * w + i)
+        return {"images": jnp.asarray(r.normal(size=(8, 32, 32, 3)),
+                                      jnp.float32),
+                "labels": jnp.asarray(r.integers(0, 10, size=(8,)),
+                                      jnp.int32)}
+
+    pushes = 30
+    rows = []
+    base_final = None
+    for scheme, fraction in SCHEMES:
+        params = small_cnn_init(jax.random.PRNGKey(0))
+        L = len(params["layers"])
+        plan = plan_from_decision(((1, 3), (4, L)), ((4, L), (1, 3)), L)
+        tr = AsyncPSTrainer(init_layers=params["layers"], loss_fn=loss_fn,
+                            optimizer=sgd(0.02), topology=topo, plan=plan,
+                            staleness=1,
+                            compressor=_compressor(scheme, fraction))
+        log = tr.run(pushes, batch_fn)
+        led = tr.server.ledger
+        final = log.losses[-1]
+        if scheme == "none":
+            base_final = final
+        rows.append({
+            "scheme": scheme,
+            "pushes": len(log.accepted),
+            "push_logical_mb": round(
+                sum(led.pushed_bytes.values()) / 1e6, 3),
+            "push_wire_mb": round(
+                sum(led.pushed_wire_bytes.values()) / 1e6, 3),
+            "wire_ratio": round(led.compression_ratio("push"), 3),
+            "sim_makespan_s": round(log.makespan, 4),
+            "first_loss": round(log.losses[0], 4),
+            "final_loss": round(final, 4),
+            "final_loss_delta_vs_fp32_pct": round(
+                100 * (final - base_final) / base_final, 3),
+        })
+    return rows
+
+
+COMPRESSION_BENCHES = {
+    "compression_planning": compression_planning,
+    "compression_training": compression_training,
+}

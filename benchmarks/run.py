@@ -32,10 +32,12 @@ def main() -> None:
                     help="also write results as JSON to this path")
     args, _ = ap.parse_known_args()
 
+    from benchmarks.compression import COMPRESSION_BENCHES
     from benchmarks.paper_figures import ALL_BENCHES
     from benchmarks.ps_scenarios import PS_BENCHES
     benches = dict(ALL_BENCHES)
     benches.update(PS_BENCHES)
+    benches.update(COMPRESSION_BENCHES)
 
     if not args.skip_roofline:
         from benchmarks.roofline_report import roofline_rows

@@ -104,6 +104,31 @@ class LayerCosts:
             dt_bwd=self.dt_bwd if dt is None else dt_bwd,
         )
 
+    def compressed(self, *, gt_ratio: float = 1.0, pt_ratio: float = 1.0,
+                   dt_bwd_extra: float = 0.0) -> "LayerCosts":
+        """Costs under wire compression: transmissions shrink by the given
+        ratios (compute untouched) while every push pays an extra
+        per-segment header cost ``dt_bwd_extra`` (e.g. top-k index/length
+        metadata), folded into Δt of the backward direction.
+
+        This is the generic ratio view for sweeps and property tests;
+        ``PSTopology.topology_costs(..., compressor=)`` computes the exact
+        per-layer wire bytes instead.
+        """
+        for name, ratio in (("gt_ratio", gt_ratio), ("pt_ratio", pt_ratio)):
+            if not 0.0 < ratio <= 1.0:
+                raise ValueError(f"{name} must be in (0, 1], got {ratio}")
+        if dt_bwd_extra < 0:
+            raise ValueError("dt_bwd_extra must be non-negative")
+        return LayerCosts(
+            pt=self.pt * pt_ratio,
+            fc=self.fc,
+            bc=self.bc,
+            gt=self.gt * gt_ratio,
+            dt=self.dt,
+            dt_bwd=self.dt_push + dt_bwd_extra,
+        )
+
 
 # ---------------------------------------------------------------------------
 # Decision representations
@@ -301,6 +326,14 @@ class TopologyCosts:
         ``comm`` ∝ 1/bandwidth on all links, ``compute`` ∝ batch size)."""
         return TopologyCosts(workers=tuple(
             c.scaled(compute=compute, comm=comm) for c in self.workers))
+
+    def compressed(self, *, gt_ratio: float = 1.0, pt_ratio: float = 1.0,
+                   dt_bwd_extra: float = 0.0) -> "TopologyCosts":
+        """Every worker's costs under wire compression (see
+        ``LayerCosts.compressed``)."""
+        return TopologyCosts(workers=tuple(
+            c.compressed(gt_ratio=gt_ratio, pt_ratio=pt_ratio,
+                         dt_bwd_extra=dt_bwd_extra) for c in self.workers))
 
 
 # ---------------------------------------------------------------------------

@@ -182,3 +182,42 @@ def reduce_scatter_bucket(grads: Dict[int, Any], specs: Sequence[FlatSpec],
         out[l] = flat[off:off + w]
         off += w
     return out
+
+
+def compressed_reduce_scatter_bucket(
+        grads: Dict[int, Any], specs: Sequence[FlatSpec],
+        bucket: Sequence[int], axis_name: str, compressor: Any,
+        residuals: Dict[int, jnp.ndarray] | None = None,
+        ) -> Tuple[Dict[int, jnp.ndarray], Dict[int, jnp.ndarray] | None]:
+    """Push one bucket with each device's contribution compressed first.
+
+    Models the PS wire: every worker quantizes/sparsifies its *own* flat
+    gradient before pushing, the server sums the decompressed payloads —
+    so the reduce-scatter operand is ``compressor.roundtrip`` of each
+    local flat buffer.  With ``residuals`` (per-layer ``(padded_l,)``
+    local buffers), the compression error of this push is carried into
+    the next one (error feedback); returns ``(shards, new_residuals)``
+    where ``new_residuals`` is ``None`` iff no residuals were given.
+    """
+    _check_bucket(specs, bucket, "compressed_reduce_scatter_bucket")
+    axis_size = specs[bucket[0]].axis_size
+    rows, new_residuals = [], None if residuals is None else {}
+    for l in bucket:
+        flat = flatten_tree(grads[l], specs[l])
+        if residuals is None:
+            flat = compressor.roundtrip(flat)
+        else:
+            flat, new_residuals[l] = compressor.feedback_roundtrip(
+                flat, residuals[l])
+        rows.append(flat.reshape(axis_size, -1))
+    concat = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=1)
+    summed = jax.lax.psum_scatter(concat, axis_name, scatter_dimension=0,
+                                  tiled=True)
+    flat = summed.reshape(-1)
+    out: Dict[int, jnp.ndarray] = {}
+    off = 0
+    for l in bucket:
+        w = specs[l].shard_size
+        out[l] = flat[off:off + w]
+        off += w
+    return out, new_residuals

@@ -37,7 +37,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.buckets import BucketPlan, flat_layer_order
-from repro.dist.collectives import (FlatSpec, flatten_tree, gather_bucket,
+from repro.dist.collectives import (FlatSpec, compressed_reduce_scatter_bucket,
+                                    flatten_tree, gather_bucket,
                                     make_flat_spec, reduce_scatter_bucket,
                                     unflatten_tree)
 from repro.models import blocks as blocks_lib
@@ -56,8 +57,11 @@ class ZeroTrainer:
     zero3: bool = False
     axis_name: str = "data"
     aux_weight: float = 0.01
+    compressor: Optional[Any] = None
 
     def __post_init__(self):
+        if self.compressor is not None and self.compressor.scheme == "none":
+            self.compressor = None        # identity: skip the wrapper math
         if self.axis_name not in self.mesh.axis_names:
             raise ValueError(f"mesh has no {self.axis_name!r} axis: "
                              f"{self.mesh.axis_names}")
@@ -111,20 +115,41 @@ class ZeroTrainer:
     # state
     # ------------------------------------------------------------------
 
+    @property
+    def _use_residuals(self) -> bool:
+        return self.compressor is not None and self.compressor.error_feedback
+
     def _make_state(self, key) -> Dict[str, Any]:
         params = model_lib.init_params(self.cfg, key, jnp.float32)
         flats = [flatten_tree(tree, spec) for tree, spec in
                  zip(model_lib.sched_layer_trees(params), self.specs)]
-        return {"flat_params": flats,
-                "opt": self.optimizer.init(flats),
-                "step": jnp.zeros((), jnp.int32)}
+        state = {"flat_params": flats,
+                 "opt": self.optimizer.init(flats),
+                 "step": jnp.zeros((), jnp.int32)}
+        if self._use_residuals:
+            # error-feedback residual of each device's own compressed push:
+            # row d is device d's (padded,) carry for that sched layer
+            state["residuals"] = [
+                jnp.zeros((self.axis_size, spec.padded), jnp.float32)
+                for spec in self.specs]
+        return state
+
+    def _state_layout(self, shapes, one_d, replicated, residual):
+        """Map state leaves to shardings/specs: flat buffers by ndim, the
+        error-feedback residuals (2-D, one row per device) explicitly."""
+        out = {k: jax.tree_util.tree_map(
+                   lambda s: one_d if s.ndim == 1 else replicated, v)
+               for k, v in shapes.items() if k != "residuals"}
+        if "residuals" in shapes:
+            out["residuals"] = [residual for _ in shapes["residuals"]]
+        return out
 
     def init_state(self, key) -> Dict[str, Any]:
         """Init identical to ``init_params(cfg, key)`` then flatten + shard."""
         shapes = jax.eval_shape(self._make_state, key)
-        flat_sh, rep_sh = self._flat_sharding(), self._replicated()
-        out_sh = jax.tree_util.tree_map(
-            lambda s: flat_sh if s.ndim == 1 else rep_sh, shapes)
+        out_sh = self._state_layout(
+            shapes, self._flat_sharding(), self._replicated(),
+            NamedSharding(self.mesh, P(self.axis_name, None)))
         return jax.jit(self._make_state, out_shardings=out_sh)(key)
 
     # ------------------------------------------------------------------
@@ -157,8 +182,8 @@ class ZeroTrainer:
     def build_train_step(self):
         """Returns jit-able ``step(state, batch) -> (state, mean_loss)``."""
         state_shapes = jax.eval_shape(self._make_state, jax.random.PRNGKey(0))
-        state_specs = jax.tree_util.tree_map(
-            lambda s: P(self.axis_name) if s.ndim == 1 else P(), state_shapes)
+        state_specs = self._state_layout(
+            state_shapes, P(self.axis_name), P(), P(self.axis_name, None))
 
         def step(state, batch):
             batch_specs = jax.tree_util.tree_map(
@@ -174,6 +199,8 @@ class ZeroTrainer:
     def _local_step(self, state, batch):
         Ls, kinds = self.num_layers, self._kinds
         shards = list(state["flat_params"])
+        res_local = state.get("residuals")     # local views: (1, padded_l)
+        new_res = list(res_local) if res_local is not None else None
 
         # ---- pull phase: one all-gather per forward bucket --------------
         full: Dict[int, Any] = {}
@@ -235,8 +262,18 @@ class ZeroTrainer:
                         p_l, acts[l])
                     g_block, ct_h = vjp((ct_h, aux_ct))
                     bucket_grads[l] = g_block
-            pushed = reduce_scatter_bucket(bucket_grads, self.specs, bucket,
-                                           self.axis_name)
+            if self.compressor is not None:
+                res_in = ({l: res_local[l][0] for l in bucket}
+                          if res_local is not None else None)
+                pushed, res_out = compressed_reduce_scatter_bucket(
+                    bucket_grads, self.specs, bucket, self.axis_name,
+                    self.compressor, residuals=res_in)
+                if res_out is not None:
+                    for l, r in res_out.items():
+                        new_res[l] = r[None, :]
+            else:
+                pushed = reduce_scatter_bucket(bucket_grads, self.specs,
+                                               bucket, self.axis_name)
             for l, g in pushed.items():
                 grad_shards[l] = g / self.axis_size     # sum → mean
 
@@ -246,6 +283,8 @@ class ZeroTrainer:
         loss = jax.lax.pmean(loss_local, self.axis_name)
         new_state = {"flat_params": new_flats, "opt": new_opt,
                      "step": state["step"] + 1}
+        if new_res is not None:
+            new_state["residuals"] = new_res
         return new_state, loss
 
     # ------------------------------------------------------------------

@@ -14,6 +14,10 @@ Kernels:
   layer tensors; fusing them into one contiguous buffer before the
   collective (and scattering back after) is the per-mini-procedure data
   movement.  Tiled HBM→VMEM copies with scalar-prefetched offsets.
+* ``compress`` — gradient compression fused into the same pass:
+  ``quantize_pack``/``dequantize_unpack`` (int8 + per-TILE scales) and the
+  ``sparsify``/``densify`` magnitude top-k gather/scatter pair backing
+  ``repro.compress``.
 * ``flash_attention`` — blockwise causal attention with sliding-window and
   logit-softcap support (gemma2/gemma3), online softmax in VMEM.
 * ``rglru_scan`` — the RG-LRU linear recurrence, vectorized over channels

@@ -16,13 +16,15 @@ redirecting them to a scratch slot at the end of the output buffer.
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro._compat.pallas import resolve_interpret
 
 TILE = 512  # 4 sublanes x 128 lanes at f32
 
@@ -57,8 +59,9 @@ def _check_aligned_lengths(aligned_lengths: Sequence[int], k_count: int) -> None
 
 
 def pack_pallas(segments: jnp.ndarray, aligned_lengths: Sequence[int], *,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: Optional[bool] = None) -> jnp.ndarray:
     """segments: (K, Lmax) with Lmax % TILE == 0 → (sum(aligned_lengths),)."""
+    interpret = resolve_interpret(interpret)
     if segments.ndim != 2:
         raise ValueError(f"segments must be (K, Lmax), got {segments.shape}")
     k_count, lmax = segments.shape
@@ -105,8 +108,9 @@ def _unpack_masked_kernel(offsets_ref, flat_ref, out_ref):
 
 
 def unpack_pallas(flat: jnp.ndarray, aligned_lengths: Sequence[int],
-                  lmax: int, *, interpret: bool = True) -> jnp.ndarray:
+                  lmax: int, *, interpret: Optional[bool] = None) -> jnp.ndarray:
     """flat (sum(aligned_lengths),) → (K, Lmax) zero-padded views."""
+    interpret = resolve_interpret(interpret)
     if lmax % TILE:
         raise ValueError(f"lmax {lmax} is not a multiple of TILE={TILE}")
     k_count = len(aligned_lengths)

@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,12 +22,12 @@ def pad_segments(vectors: Sequence[jnp.ndarray]) -> Tuple[jnp.ndarray, tuple]:
 
 @functools.partial(jax.jit, static_argnames=("aligned_lengths", "interpret"))
 def bucket_pack(segments: jnp.ndarray, aligned_lengths: tuple, *,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: Optional[bool] = None) -> jnp.ndarray:
     return pack_pallas(segments, aligned_lengths, interpret=interpret)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("aligned_lengths", "lmax", "interpret"))
 def bucket_unpack(flat: jnp.ndarray, aligned_lengths: tuple, lmax: int, *,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
     return unpack_pallas(flat, aligned_lengths, lmax, interpret=interpret)

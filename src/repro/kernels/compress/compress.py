@@ -1,0 +1,218 @@
+"""Pallas kernels: fused gradient compression on the transmission path.
+
+Two payload formats, both extending the ``bucket_pack`` streaming-copy
+pattern (scalar-prefetched offsets, grid ``(K, Lmax // TILE)``, scratch
+tile redirect for out-of-range programs):
+
+* ``quantize_pack``   — fp32 segments → int8 payload + per-TILE fp32
+  scales, in one HBM→VMEM→HBM pass.  Per tile: ``scale = absmax/127``,
+  ``q = round(x * 127/absmax)``; the inverse ``dequantize_unpack``
+  restores zero-padded (K, Lmax) rows as ``q * scale``.
+* ``sparsify``/``densify`` — magnitude top-k payloads.  Index *selection*
+  is data-dependent and happens outside the kernel (shared jnp helper in
+  ``ops.py`` so kernel and oracle agree bit-exactly); the kernels do the
+  bandwidth-bound gather/scatter as one-hot masked reductions, with -1
+  index slots self-masking.
+
+Every entry point takes ``interpret=None`` → backend auto-detect via
+``repro._compat.pallas.resolve_interpret``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro._compat.pallas import resolve_interpret
+from repro.kernels.bucket_pack.bucket_pack import (TILE, _check_aligned_lengths,
+                                                   _pack_index_out,
+                                                   _unpack_index_in, aligned)
+
+__all__ = ["TILE", "aligned", "quantize_pack_pallas",
+           "dequantize_unpack_pallas", "sparsify_pallas", "densify_pallas"]
+
+
+def _quantize_pack_kernel(offsets_ref, seg_ref, q_ref, scale_ref):
+    tile = seg_ref[...]
+    absmax = jnp.max(jnp.abs(tile))
+    inv = jnp.where(absmax > 0, 127.0 / absmax, 0.0)
+    q_ref[...] = jnp.round(tile * inv).astype(jnp.int8)
+    scale_ref[...] = jnp.full((1,), absmax / 127.0, seg_ref.dtype)
+
+
+def _scale_index_out(k, t, offsets_ref):
+    # one scale per TILE; out-of-range tiles land in the trailing scratch slot
+    base = offsets_ref[k] // TILE
+    ntiles = offsets_ref[k + 1] // TILE - base
+    in_range = t < ntiles
+    return (jnp.where(in_range, base + t, offsets_ref[-1] // TILE),)
+
+
+def _offsets(aligned_lengths: Sequence[int]) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(aligned_lengths)]).astype(np.int32)
+
+
+def quantize_pack_pallas(segments: jnp.ndarray,
+                         aligned_lengths: Sequence[int], *,
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(K, Lmax) f32 → (int8 payload (total,), f32 scales (total//TILE,))."""
+    interpret = resolve_interpret(interpret)
+    if segments.ndim != 2:
+        raise ValueError(f"segments must be (K, Lmax), got {segments.shape}")
+    if segments.dtype != jnp.float32:
+        raise ValueError(f"quantize_pack expects float32 segments, got "
+                         f"{segments.dtype}")
+    k_count, lmax = segments.shape
+    if lmax % TILE:
+        raise ValueError(f"segment row length {lmax} is not a multiple of "
+                         f"TILE={TILE}")
+    _check_aligned_lengths(aligned_lengths, k_count)
+    offsets = _offsets(aligned_lengths)
+    total = int(offsets[-1])
+    ntiles = total // TILE
+
+    grid = (k_count, lmax // TILE)
+    payload, scales = pl.pallas_call(
+        _quantize_pack_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((None, TILE), lambda k, t, offs: (k, t))],
+            out_specs=[pl.BlockSpec((TILE,), _pack_index_out),
+                       pl.BlockSpec((1,), _scale_index_out)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((total + TILE,), jnp.int8),
+                   jax.ShapeDtypeStruct((ntiles + 1,), segments.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(offsets), segments)
+    return payload[:total], scales[:ntiles]
+
+
+def _dequantize_unpack_kernel(offsets_ref, q_ref, scale_ref, out_ref):
+    k = pl.program_id(0)
+    t = pl.program_id(1)
+    ntiles = (offsets_ref[k + 1] - offsets_ref[k]) // TILE
+
+    @pl.when(t < ntiles)
+    def _():
+        out_ref[...] = q_ref[...].astype(out_ref.dtype) * scale_ref[0]
+
+    @pl.when(t >= ntiles)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def _scale_index_in(k, t, offsets_ref):
+    base = offsets_ref[k] // TILE
+    ntiles = offsets_ref[k + 1] // TILE - base
+    in_range = t < ntiles
+    return (jnp.where(in_range, base + t, 0),)
+
+
+def dequantize_unpack_pallas(payload: jnp.ndarray, scales: jnp.ndarray,
+                             aligned_lengths: Sequence[int], lmax: int, *,
+                             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(int8 payload, per-TILE scales) → (K, Lmax) f32 zero-padded rows."""
+    interpret = resolve_interpret(interpret)
+    if lmax % TILE:
+        raise ValueError(f"lmax {lmax} is not a multiple of TILE={TILE}")
+    k_count = len(aligned_lengths)
+    _check_aligned_lengths(aligned_lengths, k_count)
+    offsets = _offsets(aligned_lengths)
+    total = int(offsets[-1])
+    if payload.shape != (total,):
+        raise ValueError(f"payload shape {payload.shape} != ({total},) "
+                         f"implied by aligned lengths")
+    if scales.shape != (total // TILE,):
+        raise ValueError(f"scales shape {scales.shape} != ({total // TILE},) "
+                         f"(one per TILE={TILE})")
+
+    grid = (k_count, lmax // TILE)
+    out = pl.pallas_call(
+        _dequantize_unpack_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((TILE,), _unpack_index_in),
+                      pl.BlockSpec((1,), _scale_index_in)],
+            out_specs=pl.BlockSpec((None, TILE), lambda k, t, offs: (k, t)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((k_count, lmax), scales.dtype),
+        interpret=interpret,
+    )(jnp.asarray(offsets), payload, scales)
+    return out
+
+
+def _sparsify_kernel(idx_ref, seg_ref, out_ref):
+    idx = idx_ref[...]
+    seg = seg_ref[...]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], seg.shape[0]),
+                                       1) == idx[:, None]).astype(seg.dtype)
+    out_ref[...] = jnp.sum(onehot * seg[None, :], axis=1)
+
+
+def _check_sparse_shapes(indices: jnp.ndarray, k_count: int) -> None:
+    if indices.ndim != 2 or indices.shape[0] != k_count:
+        raise ValueError(f"indices must be (K, kmax) with K={k_count}, got "
+                         f"{indices.shape}")
+    if not jnp.issubdtype(indices.dtype, jnp.integer):
+        raise ValueError(f"indices must be integer, got {indices.dtype}")
+
+
+def sparsify_pallas(segments: jnp.ndarray, indices: jnp.ndarray, *,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Gather (K, kmax) values from (K, Lmax) rows; -1 slots yield 0."""
+    interpret = resolve_interpret(interpret)
+    if segments.ndim != 2:
+        raise ValueError(f"segments must be (K, Lmax), got {segments.shape}")
+    k_count, lmax = segments.shape
+    _check_sparse_shapes(indices, k_count)
+    kmax = indices.shape[1]
+
+    return pl.pallas_call(
+        _sparsify_kernel,
+        grid=(k_count,),
+        in_specs=[pl.BlockSpec((None, kmax), lambda k: (k, 0)),
+                  pl.BlockSpec((None, lmax), lambda k: (k, 0))],
+        out_specs=pl.BlockSpec((None, kmax), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_count, kmax), segments.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), segments)
+
+
+def _densify_kernel(idx_ref, val_ref, out_ref):
+    idx = idx_ref[...]
+    val = val_ref[...]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32,
+                                       (idx.shape[0], out_ref.shape[0]), 1)
+              == idx[:, None]).astype(val.dtype)
+    out_ref[...] = jnp.sum(onehot * val[:, None], axis=0)
+
+
+def densify_pallas(values: jnp.ndarray, indices: jnp.ndarray, lmax: int, *,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Scatter (K, kmax) values back to dense (K, lmax); -1 slots drop."""
+    interpret = resolve_interpret(interpret)
+    if values.ndim != 2:
+        raise ValueError(f"values must be (K, kmax), got {values.shape}")
+    k_count, kmax = values.shape
+    _check_sparse_shapes(indices, k_count)
+    if indices.shape != values.shape:
+        raise ValueError(f"indices shape {indices.shape} != values shape "
+                         f"{values.shape}")
+
+    return pl.pallas_call(
+        _densify_kernel,
+        grid=(k_count,),
+        in_specs=[pl.BlockSpec((None, kmax), lambda k: (k, 0)),
+                  pl.BlockSpec((None, kmax), lambda k: (k, 0))],
+        out_specs=pl.BlockSpec((None, lmax), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_count, lmax), values.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), values)

@@ -1,0 +1,72 @@
+"""Public jit'd wrappers + the shared top-k index selection helper."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compress.compress import (TILE, aligned,
+                                             densify_pallas,
+                                             dequantize_unpack_pallas,
+                                             quantize_pack_pallas,
+                                             sparsify_pallas)
+
+__all__ = ["TILE", "aligned", "quantize_pack", "dequantize_unpack",
+           "topk_indices", "sparsify", "densify"]
+
+
+@functools.partial(jax.jit, static_argnames=("aligned_lengths", "interpret"))
+def quantize_pack(segments: jnp.ndarray, aligned_lengths: tuple, *,
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return quantize_pack_pallas(segments, aligned_lengths,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("aligned_lengths", "lmax", "interpret"))
+def dequantize_unpack(payload: jnp.ndarray, scales: jnp.ndarray,
+                      aligned_lengths: tuple, lmax: int, *,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    return dequantize_unpack_pallas(payload, scales, aligned_lengths, lmax,
+                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "lengths"))
+def topk_indices(segments: jnp.ndarray, lengths: tuple,
+                 k: int) -> jnp.ndarray:
+    """Per-row magnitude top-k positions, deterministically.
+
+    Ties break toward the lower index (stable sort on descending |v|);
+    positions past the row's true ``lengths[i]`` never win; rows with
+    fewer than ``k`` valid positions pad with -1.  Returned ascending per
+    row with the -1 padding sorted to the front.  Shared by the Pallas
+    path and the pure-jnp oracle so both select identical coordinates.
+    """
+    k_count, lmax = segments.shape
+    if len(lengths) != k_count:
+        raise ValueError(f"got {len(lengths)} lengths for {k_count} rows")
+    if not 1 <= k <= lmax:
+        raise ValueError(f"k={k} out of range for row length {lmax}")
+    pos = jnp.arange(lmax)[None, :]
+    valid = pos < jnp.asarray(lengths, jnp.int32)[:, None]
+    mag = jnp.where(valid, jnp.abs(segments), -1.0)
+    order = jnp.argsort(-mag, axis=1, stable=True)[:, :k]
+    chosen_valid = jnp.take_along_axis(mag, order, axis=1) >= 0
+    idx = jnp.where(chosen_valid, order, -1)
+    return jnp.sort(idx, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparsify(segments: jnp.ndarray, indices: jnp.ndarray, *,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    return sparsify_pallas(segments, indices, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("lmax", "interpret"))
+def densify(values: jnp.ndarray, indices: jnp.ndarray, lmax: int, *,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    return densify_pallas(values, indices, lmax, interpret=interpret)

@@ -50,9 +50,9 @@ import argparse
 import time
 
 from repro.configs import ARCHITECTURES
-from repro.runtime import (ExecutionConfig, MeasureConfig, NetworkConfig,
-                           RuntimeConfig, ScheduleConfig, TopologyConfig,
-                           build_runtime)
+from repro.runtime import (CompressionConfig, ExecutionConfig, MeasureConfig,
+                           NetworkConfig, RuntimeConfig, ScheduleConfig,
+                           TopologyConfig, build_runtime)
 
 
 def config_from_flags(args) -> RuntimeConfig:
@@ -97,7 +97,12 @@ def config_from_flags(args) -> RuntimeConfig:
             aggregate=args.aggregate),
         measure=MeasureConfig(
             cost_source=args.cost_source,
-            compute_flops_per_s=args.worker_flops))
+            compute_flops_per_s=args.worker_flops),
+        compression=CompressionConfig(
+            scheme=args.compress,
+            topk_fraction=(args.topk_fraction
+                           if args.compress == "topk" else None),
+            error_feedback=not args.no_error_feedback))
 
 
 def _print_events(rt) -> None:
@@ -186,6 +191,15 @@ def main() -> None:
                          "bandwidth at --shift-epoch")
     ap.add_argument("--worker-flops", type=float, default=1e10,
                     help="edge-worker compute rate fed to the profiler")
+    ap.add_argument("--compress", choices=("none", "int8", "topk"),
+                    default="none",
+                    help="ps runtimes: compress gradient pushes (int8 "
+                         "per-tile quantization or top-k sparsification)")
+    ap.add_argument("--topk-fraction", type=float, default=0.01,
+                    help="fraction of entries kept by --compress topk")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable error-feedback residual accumulation "
+                         "on compressed pushes")
     ap.add_argument("--steps", type=int, default=100,
                     help="units of progress to run (must be >= 1)")
     ap.add_argument("--batch", type=int, default=8)
@@ -252,6 +266,11 @@ def main() -> None:
           f"{led['pull_bytes'] / 1e6:.1f} MB down / "
           f"{led['push_bytes'] / 1e6:.1f} MB up "
           f"({led['num_pulls']} pulls, {led['num_pushes']} pushes)")
+    if config.compression.enabled:
+        print(f"[{config.runtime}] push wire "
+              f"{led['push_wire_bytes'] / 1e6:.1f} MB "
+              f"({config.compression.scheme}, "
+              f"{led['push_compression_ratio']:.2f}x vs fp32)")
     if args.checkpoint:
         rt.save_state(args.checkpoint)
         print(f"saved runtime state to {args.checkpoint}")

@@ -62,6 +62,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.buckets import BucketPlan, decision_from_plan
 from repro.core.costmodel import TopologyCosts, iteration_time
@@ -156,6 +157,13 @@ class AsyncPSTrainer:
         optional per-worker ``TopologyCosts`` driving the simulated
         clock; without it every worker's iteration costs one unit, which
         keeps the event order deterministic but uninformative.
+    compressor:
+        optional ``repro.compress`` scheme applied to every gradient push
+        (per-layer flat buffers compressed before they hit the server;
+        pulls stay fp32).  With ``compressor.error_feedback`` each
+        (worker, layer) pair carries a residual of its own quantization
+        error into its next push.  The ledger accounts wire vs logical
+        bytes per worker.
     """
 
     def __init__(self, *, init_layers: Sequence[Any],
@@ -164,7 +172,8 @@ class AsyncPSTrainer:
                  plan: Union[BucketPlan, Sequence[BucketPlan]],
                  staleness: int = 1, throttle: str = "reject",
                  aggregate: bool = False,
-                 costs: Optional[TopologyCosts] = None):
+                 costs: Optional[TopologyCosts] = None,
+                 compressor=None):
         init_layers = list(init_layers)
         if not init_layers:
             raise ValueError("need at least one layer tree")
@@ -190,8 +199,19 @@ class AsyncPSTrainer:
             make_flat_spec(t, 1) for t in init_layers)
         self._plans = self._as_worker_plans(plan)
         flats = [flatten_tree(t, s) for t, s in zip(init_layers, self.specs)]
+        if compressor is not None and compressor.scheme == "none":
+            compressor = None
+        self.compressor = compressor
         self.server = PSServer(self.specs, topology, optimizer, flats,
-                               staleness_bound=staleness)
+                               staleness_bound=staleness,
+                               compressor=compressor)
+        if compressor is None:
+            self._compress_fn = None
+        elif compressor.error_feedback:
+            self._compress_fn = jax.jit(compressor.feedback_roundtrip)
+        else:
+            self._compress_fn = jax.jit(compressor.roundtrip)
+        self._residuals: Dict[Tuple[int, int], jnp.ndarray] = {}
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
         if costs is not None and costs.num_workers != topology.num_workers:
             raise ValueError(f"costs for {costs.num_workers} workers, "
@@ -299,12 +319,28 @@ class AsyncPSTrainer:
         loss, grads = self._grad_fn(layers, batch)
         return float(loss), version, grads
 
+    def _compress_flat(self, worker: int, layer: int,
+                       flat: jnp.ndarray) -> jnp.ndarray:
+        """What the server reconstructs from this worker's wire payload;
+        under error feedback the residual carries into the next push."""
+        if self.compressor is None:
+            return flat
+        if not self.compressor.error_feedback:
+            return self._compress_fn(flat)
+        key = (worker, layer)
+        residual = self._residuals.get(key)
+        if residual is None:
+            residual = jnp.zeros_like(flat)
+        compressed, self._residuals[key] = self._compress_fn(flat, residual)
+        return compressed
+
     def _push(self, worker: int, version: int,
               grads: List[Any]) -> PushResult:
         """Push every backward segment; the last one commits."""
         result: Optional[PushResult] = None
         for bucket in self._plans[worker].backward:
-            flat_grads = {l: flatten_tree(grads[l], self.specs[l])
+            flat_grads = {l: self._compress_flat(
+                              worker, l, flatten_tree(grads[l], self.specs[l]))
                           for l in bucket}
             result = self.server.push_bucket(worker, version, bucket,
                                              flat_grads)
@@ -443,9 +479,11 @@ class AsyncPSTrainer:
             full: Dict[int, Any] = {}
             for bucket in self._plans[w].backward:
                 for l in bucket:
-                    full[l] = flatten_tree(grads[l], self.specs[l])
+                    full[l] = self._compress_flat(
+                        w, l, flatten_tree(grads[l], self.specs[l]))
                 self.server.ledger.record_push(
-                    w, self.server.segment_bytes(bucket))
+                    w, self.server.segment_bytes(bucket),
+                    wire_bytes=self.server.push_wire_bytes(bucket))
             pushes.append((w, pin, full))
         return self.server.push_aggregated(pushes)
 
@@ -515,8 +553,11 @@ class AsyncPSTrainer:
         computations hold gradients pinned at pre-restore versions and
         computed against pre-rollback weights — committing them against
         the restored parameters would silently corrupt the trajectory.
-        The next ``run`` starts a fresh loop at simulated time 0."""
+        The next ``run`` starts a fresh loop at simulated time 0.
+        Error-feedback residuals are cleared too (they describe pushes of
+        the discarded trajectory)."""
         self._loop = None
+        self._residuals = {}
 
     @property
     def log(self) -> Optional[AsyncRunLog]:

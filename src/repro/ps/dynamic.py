@@ -104,6 +104,7 @@ class DynamicPSTrainer(ReplanMixin):
     zero3: bool = False
     axis_name: str = "data"
     aux_weight: float = 0.01
+    compressor: Optional[Any] = None
 
     def __post_init__(self):
         if self.steps_per_epoch < 1:
@@ -128,7 +129,9 @@ class DynamicPSTrainer(ReplanMixin):
                               optimizer=self.optimizer,
                               topology=self.topology.topology_at(0),
                               zero3=self.zero3, axis_name=self.axis_name,
-                              aux_weight=self.aux_weight)
+                              aux_weight=self.aux_weight,
+                              compressor=self.compressor)
+        self.compressor = self.base.compressor   # "none" normalized away
         self._init_replan()
         self._step_idx = 0
         self._costs: Optional[TopologyCosts] = None
@@ -162,7 +165,8 @@ class DynamicPSTrainer(ReplanMixin):
         """
         topo = self.topology.topology_at(epoch)
         if self.cost_source == "analytic":
-            return topo.topology_costs(self._profiles)
+            return topo.topology_costs(self._profiles,
+                                       compressor=self.compressor)
         if measurement_due(self._measured_fc_bc, self._measured_epoch,
                            epoch, self.remeasure_every, force=remeasure):
             if state is None or batch is None:
@@ -182,7 +186,8 @@ class DynamicPSTrainer(ReplanMixin):
                 self._measured_epoch = epoch
         fc, bc = self._measured_fc_bc
         return topo.topology_costs_measured(
-            self._profiles, fc=fc, bc=bc, ref_flops=self.measure_ref_flops)
+            self._profiles, fc=fc, bc=bc, ref_flops=self.measure_ref_flops,
+            compressor=self.compressor)
 
     def timeline(self, epoch: Optional[int] = None):
         """Per-worker timeline of the *active* plan against an epoch's
@@ -299,7 +304,8 @@ class DynamicAsyncPSTrainer:
                  pushes_per_epoch: int, staleness: int = 1,
                  throttle: str = "reject", aggregate: bool = False,
                  strategy: str = "dynacomm",
-                 profiles: Optional[Sequence[LayerProfile]] = None):
+                 profiles: Optional[Sequence[LayerProfile]] = None,
+                 compressor: Optional[Any] = None):
         if pushes_per_epoch < 1:
             raise ValueError(f"pushes_per_epoch must be >= 1, got "
                              f"{pushes_per_epoch}")
@@ -317,7 +323,9 @@ class DynamicAsyncPSTrainer:
             plan=BucketPlan(
                 forward=(tuple(range(len(init_layers))),),
                 backward=(tuple(range(len(init_layers) - 1, -1, -1)),)),
-            staleness=staleness, throttle=throttle, aggregate=aggregate)
+            staleness=staleness, throttle=throttle, aggregate=aggregate,
+            compressor=compressor)
+        self.compressor = self.trainer.compressor   # "none" normalized away
         self._profiles = (tuple(profiles) if profiles is not None
                           else profiles_from_specs(self.trainer.specs))
         self._worker_plans: Optional[Tuple[BucketPlan, ...]] = None
@@ -340,7 +348,7 @@ class DynamicAsyncPSTrainer:
 
     def costs_for_epoch(self, epoch: int) -> TopologyCosts:
         return self.topology.topology_at(epoch).topology_costs(
-            self._profiles)
+            self._profiles, compressor=self.compressor)
 
     def _replan(self, epoch: int) -> None:
         costs = self.costs_for_epoch(epoch)

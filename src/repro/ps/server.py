@@ -52,22 +52,53 @@ class PushResult:
 
 @dataclasses.dataclass
 class TransferLedger:
-    """Per-worker byte/message accounting, split by direction."""
+    """Per-worker byte/message accounting, split by direction.
+
+    Tracks *logical* bytes (the fp32 payload the training step produced)
+    and *wire* bytes (what actually crossed the link after compression)
+    separately; without a compressor the two coincide.
+    """
 
     pulled_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
     pushed_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    pulled_wire_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    pushed_wire_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
     num_pulls: int = 0
     num_pushes: int = 0
     rejected_pushes: int = 0
     waited_pushes: int = 0        # SSP wait-throttle: commits that blocked
 
-    def record_pull(self, worker: int, nbytes: int) -> None:
+    def record_pull(self, worker: int, nbytes: int,
+                    wire_bytes: Optional[int] = None) -> None:
+        wire = nbytes if wire_bytes is None else wire_bytes
         self.pulled_bytes[worker] = self.pulled_bytes.get(worker, 0) + nbytes
+        self.pulled_wire_bytes[worker] = \
+            self.pulled_wire_bytes.get(worker, 0) + wire
         self.num_pulls += 1
 
-    def record_push(self, worker: int, nbytes: int) -> None:
+    def record_push(self, worker: int, nbytes: int,
+                    wire_bytes: Optional[int] = None) -> None:
+        wire = nbytes if wire_bytes is None else wire_bytes
         self.pushed_bytes[worker] = self.pushed_bytes.get(worker, 0) + nbytes
+        self.pushed_wire_bytes[worker] = \
+            self.pushed_wire_bytes.get(worker, 0) + wire
         self.num_pushes += 1
+
+    def compression_ratio(self, direction: str = "push",
+                          worker: Optional[int] = None) -> float:
+        """logical/wire byte ratio (>1 means smaller on the wire) for one
+        direction, fleet-wide or for a single worker; 1.0 with no traffic."""
+        if direction == "push":
+            logical, wire = self.pushed_bytes, self.pushed_wire_bytes
+        elif direction == "pull":
+            logical, wire = self.pulled_bytes, self.pulled_wire_bytes
+        else:
+            raise ValueError(f"direction must be 'push' or 'pull', got "
+                             f"{direction!r}")
+        workers = logical.keys() if worker is None else [worker]
+        num = sum(logical.get(w, 0) for w in workers)
+        den = sum(wire.get(w, 0) for w in workers)
+        return num / den if den else 1.0
 
 
 class PSServer:
@@ -75,7 +106,9 @@ class PSServer:
 
     def __init__(self, specs: Sequence[FlatSpec], topology: PSTopology,
                  optimizer: Optimizer, init_flats: Sequence[jnp.ndarray], *,
-                 staleness_bound: int = 0):
+                 staleness_bound: int = 0, compressor=None):
+        if compressor is not None and compressor.scheme == "none":
+            compressor = None
         if staleness_bound < 0:
             raise ValueError(f"staleness_bound must be >= 0, got "
                              f"{staleness_bound}")
@@ -90,6 +123,7 @@ class PSServer:
         self.topology = topology
         self.optimizer = optimizer
         self.staleness_bound = staleness_bound
+        self.compressor = compressor
         self._flats: List[jnp.ndarray] = [jnp.asarray(f, FLAT_DTYPE)
                                           for f in init_flats]
         self._opt_state = optimizer.init(self._flats)
@@ -111,6 +145,16 @@ class PSServer:
     def segment_bytes(self, bucket: Sequence[int]) -> int:
         """Payload of one segment message (unpadded f32 bytes)."""
         return bucket_bytes(self.specs, bucket)
+
+    def push_wire_bytes(self, bucket: Sequence[int]) -> int:
+        """Bytes one segment's push puts on the uplink: per-layer
+        compressed payloads plus the per-segment header; equals
+        ``segment_bytes`` without a compressor."""
+        if self.compressor is None:
+            return self.segment_bytes(bucket)
+        wire = sum(float(self.compressor.wire_bytes(self.specs[l].total * 4))
+                   for l in bucket)
+        return int(round(wire + self.compressor.segment_overhead_bytes))
 
     def pull_bucket(self, bucket: Sequence[int], *,
                     version: Optional[int] = None,
@@ -160,7 +204,8 @@ class PSServer:
                 raise ValueError(f"layer {l} pushed twice by worker "
                                  f"{worker} at version {version}")
             pending[l] = jnp.asarray(grads[l], FLAT_DTYPE)
-        self.ledger.record_push(worker, self.segment_bytes(bucket))
+        self.ledger.record_push(worker, self.segment_bytes(bucket),
+                                wire_bytes=self.push_wire_bytes(bucket))
         if len(pending) < self.num_layers:
             return None
         del self._pending[key]

@@ -145,11 +145,16 @@ class PSTopology:
     def worker_costs(self, worker: int, *, param_bytes: Sequence[float],
                      flops_fwd: Sequence[float],
                      flops_bwd: Sequence[float] | None = None,
-                     grad_bytes: Sequence[float] | None = None) -> LayerCosts:
+                     grad_bytes: Sequence[float] | None = None,
+                     compressor: Any | None = None) -> LayerCosts:
         """This worker's per-layer cost vectors.
 
         pt/Δt from its downlink, gt/Δt_bwd from its uplink, fc/bc from its
-        own compute rate (bc defaults to 2× fc FLOPs)."""
+        own compute rate (bc defaults to 2× fc FLOPs).  With a
+        ``compressor``, gradient pushes are timed on the *wire* payload
+        (``compressor.wire_bytes``), and each push segment's Δt grows by
+        the compressor's per-segment header cost over this uplink; pulls
+        stay fp32."""
         if not 0 <= worker < self.num_workers:
             raise ValueError(f"worker {worker} outside "
                              f"0..{self.num_workers - 1}")
@@ -160,12 +165,17 @@ class PSTopology:
         fb = 2.0 * ff if flops_bwd is None else np.asarray(flops_bwd,
                                                            np.float64)
         rate = self.worker_flops[worker]
+        dt_bwd = link.up.dt
+        if compressor is not None:
+            gb = np.asarray(compressor.wire_bytes(gb), np.float64)
+            dt_bwd += float(
+                link.up.transfer_time(compressor.segment_overhead_bytes))
         return LayerCosts(pt=link.down.transfer_time(pb), fc=ff / rate,
                           bc=fb / rate, gt=link.up.transfer_time(gb),
-                          dt=link.down.dt, dt_bwd=link.up.dt)
+                          dt=link.down.dt, dt_bwd=dt_bwd)
 
-    def topology_costs(self, profiles: Sequence[LayerProfile]
-                       ) -> TopologyCosts:
+    def topology_costs(self, profiles: Sequence[LayerProfile], *,
+                       compressor: Any | None = None) -> TopologyCosts:
         """Per-worker ``LayerCosts`` from one set of layer workloads."""
         pb = [p.param_bytes for p in profiles]
         gb = [p.gbytes for p in profiles]
@@ -173,12 +183,13 @@ class PSTopology:
         fb = [p.bwd for p in profiles]
         return TopologyCosts(workers=tuple(
             self.worker_costs(w, param_bytes=pb, flops_fwd=ff, flops_bwd=fb,
-                              grad_bytes=gb)
+                              grad_bytes=gb, compressor=compressor)
             for w in range(self.num_workers)))
 
     def topology_costs_measured(self, profiles: Sequence[LayerProfile], *,
                                 fc: Sequence[float], bc: Sequence[float],
-                                ref_flops: float | None = None
+                                ref_flops: float | None = None,
+                                compressor: Any | None = None
                                 ) -> TopologyCosts:
         """Per-worker costs from *measured* per-layer fc/bc wall times.
 
@@ -203,10 +214,15 @@ class PSTopology:
         for w in range(self.num_workers):
             link = self.links[w]
             scale = ref / self.worker_flops[w]
+            gb_w, dt_bwd = gb, link.up.dt
+            if compressor is not None:
+                gb_w = np.asarray(compressor.wire_bytes(gb), np.float64)
+                dt_bwd += float(
+                    link.up.transfer_time(compressor.segment_overhead_bytes))
             workers.append(LayerCosts(
                 pt=link.down.transfer_time(pb), fc=fc * scale,
-                bc=bc * scale, gt=link.up.transfer_time(gb),
-                dt=link.down.dt, dt_bwd=link.up.dt))
+                bc=bc * scale, gt=link.up.transfer_time(gb_w),
+                dt=link.down.dt, dt_bwd=dt_bwd))
         return TopologyCosts(workers=tuple(workers))
 
 

@@ -59,8 +59,11 @@ class PSTrainer:
     zero3: bool = False
     axis_name: str = "data"
     aux_weight: float = 0.01
+    compressor: Optional[Any] = None
 
     def __post_init__(self):
+        if self.compressor is not None and self.compressor.scheme == "none":
+            self.compressor = None
         axis = int(self.mesh.shape[self.axis_name])
         if self.topology.num_workers != axis:
             raise ValueError(
@@ -72,7 +75,8 @@ class PSTrainer:
         self._zero = ZeroTrainer(cfg=self.cfg, mesh=self.mesh,
                                  plan=self.plan, optimizer=self.optimizer,
                                  zero3=self.zero3, axis_name=self.axis_name,
-                                 aux_weight=self.aux_weight)
+                                 aux_weight=self.aux_weight,
+                                 compressor=self.compressor)
         self.specs = self._zero.specs
         self.num_layers = self._zero.num_layers
 
@@ -85,17 +89,21 @@ class PSTrainer:
                       topology: PSTopology, optimizer: Optimizer,
                       input_shape: InputShape, *,
                       strategy: str = "dynacomm",
+                      compressor: Optional[Any] = None,
                       **kwargs) -> "PSTrainer":
         """Schedule against the topology and build the trainer.
 
         Synchronous mode needs one shared plan; the consensus decision
         minimizes the straggler's iteration time (see
-        ``core.scheduler.consensus_decision``)."""
-        topo_costs = topology.topology_costs(layer_profiles(cfg, input_shape))
+        ``core.scheduler.consensus_decision``).  A ``compressor`` is
+        threaded into the plan search (pushes are timed on wire bytes, so
+        the DP re-segments) and into the execution path."""
+        topo_costs = topology.topology_costs(layer_profiles(cfg, input_shape),
+                                             compressor=compressor)
         decision, _ = consensus_decision(topo_costs, strategy)
         plan = plan_from_decision(*decision, model_lib.num_sched_layers(cfg))
         return cls(cfg=cfg, mesh=mesh, plan=plan, optimizer=optimizer,
-                   topology=topology, **kwargs)
+                   topology=topology, compressor=compressor, **kwargs)
 
     def with_plan(self, plan: BucketPlan) -> "PSTrainer":
         return dataclasses.replace(self, plan=plan)
@@ -141,10 +149,28 @@ class PSTrainer:
         }
 
     def transfer_bytes(self) -> Dict[str, int]:
-        """Per-iteration bytes each worker moves on each direction."""
+        """Per-iteration logical fp32 bytes each worker moves per
+        direction."""
         return {
             "pull": sum(self.segment_bytes(b) for b in self.plan.forward),
             "push": sum(self.segment_bytes(b) for b in self.plan.backward),
+        }
+
+    def segment_wire_bytes(self, bucket) -> int:
+        """Bytes one segment's push puts on the uplink (compressed
+        per-layer payloads + per-segment header)."""
+        if self.compressor is None:
+            return self.segment_bytes(bucket)
+        wire = sum(float(self.compressor.wire_bytes(self.specs[l].total * 4))
+                   for l in bucket)
+        return int(round(wire + self.compressor.segment_overhead_bytes))
+
+    def transfer_wire_bytes(self) -> Dict[str, int]:
+        """Per-iteration *wire* bytes per direction (pulls stay fp32)."""
+        return {
+            "pull": sum(self.segment_bytes(b) for b in self.plan.forward),
+            "push": sum(self.segment_wire_bytes(b)
+                        for b in self.plan.backward),
         }
 
     # ------------------------------------------------------------------
@@ -153,7 +179,8 @@ class PSTrainer:
 
     def topology_costs(self, input_shape: InputShape) -> TopologyCosts:
         return self.topology.topology_costs(
-            layer_profiles(self.cfg, input_shape))
+            layer_profiles(self.cfg, input_shape),
+            compressor=self.compressor)
 
     def timeline_from_costs(self, costs: TopologyCosts) -> PSTimeline:
         """Per-worker timeline of one synchronous iteration of *this

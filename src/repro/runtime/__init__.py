@@ -17,19 +17,20 @@ idle-window bookkeeping) lives here too, in :mod:`repro.runtime.replan`.
 """
 
 from repro.runtime.config import (DYNAMIC_RUNTIMES, RUNTIME_REGIMES,
-                                  ExecutionConfig, MeasureConfig,
-                                  NetworkConfig, RuntimeConfig,
-                                  ScheduleConfig, TopologyConfig)
-from repro.runtime.protocol import Trainer
+                                  CompressionConfig, ExecutionConfig,
+                                  MeasureConfig, NetworkConfig,
+                                  RuntimeConfig, ScheduleConfig,
+                                  TopologyConfig)
+from repro.runtime.protocol import EvalEvent, Trainer
 from repro.runtime.replan import (PlanStepCache, ReplanMixin,
                                   RescheduleEvent, hlo_collective_counts,
                                   sequential_plan)
 
 __all__ = [
     "RuntimeConfig", "ScheduleConfig", "ExecutionConfig", "MeasureConfig",
-    "NetworkConfig", "TopologyConfig",
+    "NetworkConfig", "TopologyConfig", "CompressionConfig",
     "RUNTIME_REGIMES", "DYNAMIC_RUNTIMES",
-    "Trainer",
+    "Trainer", "EvalEvent",
     "PlanStepCache", "RescheduleEvent", "ReplanMixin",
     "hlo_collective_counts", "sequential_plan",
     "build_runtime", "register_runtime", "runtime_names", "RUNTIMES",

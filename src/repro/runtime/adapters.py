@@ -39,12 +39,26 @@ def _data_mesh() -> Mesh:
     return Mesh(np.array(devs).reshape(len(devs),), ("data",))
 
 
-def _plan_ledger(specs, plan, workers: int) -> Dict[str, int]:
-    """One synchronous iteration's fleet-wide transfer accounting."""
+def _plan_ledger(specs, plan, workers: int,
+                 compressor: Optional[Any] = None) -> Dict[str, int]:
+    """One synchronous iteration's fleet-wide transfer accounting.
+
+    ``push_wire_bytes`` is what the uplink actually carries: compressed
+    per-layer payloads plus the per-segment header when a ``compressor``
+    is active, the fp32 payload otherwise (pulls always stay fp32)."""
     from repro.dist.collectives import bucket_bytes
     pull = sum(bucket_bytes(specs, b) for b in plan.forward)
     push = sum(bucket_bytes(specs, b) for b in plan.backward)
+    if compressor is None:
+        push_wire = push
+    else:
+        push_wire = sum(
+            int(round(sum(float(compressor.wire_bytes(specs[l].total * 4))
+                          for l in b) + compressor.segment_overhead_bytes))
+            for b in plan.backward)
     return {"pull_bytes": pull * workers, "push_bytes": push * workers,
+            "pull_wire_bytes": pull * workers,
+            "push_wire_bytes": push_wire * workers,
             "num_pulls": len(plan.forward) * workers,
             "num_pushes": len(plan.backward) * workers}
 
@@ -58,13 +72,14 @@ class RuntimeAdapter:
         self.arch = arch
         self._batch_fn = batch_fn
         self._data_idx = 0            # units of progress consumed
+        self._eval_events: List[Any] = []
         self.shape = InputShape("runtime", config.seq, config.batch, "train")
 
     # -- protocol surface ------------------------------------------------
 
     @property
     def events(self) -> Sequence[Any]:
-        return ()
+        return tuple(self._eval_events)
 
     def timeline(self) -> Optional[Any]:
         return None
@@ -72,16 +87,36 @@ class RuntimeAdapter:
     @property
     def ledger(self) -> Dict[str, Any]:
         return {"pull_bytes": 0, "push_bytes": 0,
+                "pull_wire_bytes": 0, "push_wire_bytes": 0,
                 "num_pulls": 0, "num_pushes": 0}
 
-    def fit(self, steps: int, *, log_every: int = 0) -> List[float]:
+    @staticmethod
+    def _check_eval(eval_fn, eval_every: int) -> None:
+        if eval_fn is not None and eval_every < 1:
+            raise ValueError(f"eval_fn needs eval_every >= 1, got "
+                             f"{eval_every}")
+
+    def _record_eval(self, eval_fn) -> None:
+        from repro.runtime.protocol import EvalEvent
+        self._eval_events.append(
+            EvalEvent(unit=self._data_idx, loss=float(eval_fn())))
+
+    def fit(self, steps: int, *, log_every: int = 0,
+            eval_fn: Optional[Callable[[], float]] = None,
+            eval_every: int = 0) -> List[float]:
         """Run ``steps`` units of progress from the configured data,
-        printing a one-line progress report every ``log_every`` units."""
+        printing a one-line progress report every ``log_every`` units.
+        With ``eval_fn`` (zero-arg, returns a scalar loss), evaluate every
+        ``eval_every`` units and record an ``EvalEvent`` into
+        ``events``."""
+        self._check_eval(eval_fn, eval_every)
         losses = []
         for _ in range(steps):
             losses.append(self.step(self._batch_fn(self._data_idx)))
             if log_every and len(losses) % log_every == 0:
                 print(f"step {self._data_idx:4d}  loss {losses[-1]:.4f}")
+            if eval_fn is not None and self._data_idx % eval_every == 0:
+                self._record_eval(eval_fn)
         return losses
 
     def step(self, batch) -> float:
@@ -135,18 +170,25 @@ class _CompiledRuntime(RuntimeAdapter):
     def __init__(self, config, arch, batch_fn):
         super().__init__(config, arch, batch_fn)
         self._led = {"pull_bytes": 0, "push_bytes": 0,
+                     "pull_wire_bytes": 0, "push_wire_bytes": 0,
                      "num_pulls": 0, "num_pushes": 0}
         self._led_by_plan: Dict[Any, Dict[str, int]] = {}
 
-    def _account(self, specs, plan, workers: int) -> None:
+    def _account(self, specs, plan, workers: int,
+                 compressor: Optional[Any] = None) -> None:
         if plan not in self._led_by_plan:
-            self._led_by_plan[plan] = _plan_ledger(specs, plan, workers)
+            self._led_by_plan[plan] = _plan_ledger(specs, plan, workers,
+                                                   compressor)
         for k, v in self._led_by_plan[plan].items():
             self._led[k] += v
 
     @property
     def ledger(self) -> Dict[str, Any]:
-        return dict(self._led)
+        led = dict(self._led)
+        led["push_compression_ratio"] = (
+            led["push_bytes"] / led["push_wire_bytes"]
+            if led["push_wire_bytes"] else 1.0)
+        return led
 
     def save_state(self, path: str) -> None:
         self._save_tree(path, {"model": self._state})
@@ -264,7 +306,7 @@ class DynamicRuntime(_CompiledRuntime):
 
     @property
     def events(self):
-        return self.trainer.events
+        return tuple(self.trainer.events) + tuple(self._eval_events)
 
     @property
     def plan(self):
@@ -310,6 +352,7 @@ class PSRuntime(_PSBase):
             arch, _data_mesh(), self._build_topology(),
             config.build_optimizer(), self.shape,
             strategy=config.schedule.strategy,
+            compressor=config.compression.build(),
             zero3=config.execution.zero3, aux_weight=config.aux_weight)
         self._state = self.trainer.init_state(
             jax.random.PRNGKey(config.seed))
@@ -322,7 +365,8 @@ class PSRuntime(_PSBase):
     def step(self, batch) -> float:
         self._state, loss = self._step_fn(self._state, batch)
         self._account(self.trainer.specs, self.trainer.plan,
-                      self.trainer.topology.num_workers)
+                      self.trainer.topology.num_workers,
+                      self.trainer.compressor)
         self._data_idx += 1
         return float(loss)
 
@@ -346,6 +390,7 @@ class DynamicPSRuntime(_PSBase):
             steps_per_epoch=config.schedule.reschedule_every,
             input_shape=self.shape, strategy=config.schedule.strategy,
             zero3=config.execution.zero3, aux_weight=config.aux_weight,
+            compressor=config.compression.build(),
             cost_source=config.measure.cost_source,
             remeasure_every=config.measure.remeasure_every,
             measure_iters=config.measure.measure_iters,
@@ -355,7 +400,7 @@ class DynamicPSRuntime(_PSBase):
 
     @property
     def events(self):
-        return self.trainer.events
+        return tuple(self.trainer.events) + tuple(self._eval_events)
 
     @property
     def plan(self):
@@ -364,7 +409,8 @@ class DynamicPSRuntime(_PSBase):
     def step(self, batch) -> float:
         self._state, loss = self.trainer.step(self._state, batch)
         self._account(self.trainer.base.specs, self.trainer.plan,
-                      self.trainer.base.topology.num_workers)
+                      self.trainer.base.topology.num_workers,
+                      self.trainer.compressor)
         self._data_idx += 1
         return float(loss)
 
@@ -429,14 +475,26 @@ class _AsyncBase(RuntimeAdapter):
         self._data_idx += len(fresh)
         return [e.loss for e in fresh]
 
-    def fit(self, steps: int, *, log_every: int = 0) -> List[float]:
+    def fit(self, steps: int, *, log_every: int = 0,
+            eval_fn: Optional[Callable[[], float]] = None,
+            eval_every: int = 0) -> List[float]:
+        # accepted pushes land in chunks (BSP aggregation can commit a
+        # whole cohort), so evals trigger on *boundary crossings* of the
+        # cumulative push count rather than exact multiples
+        self._check_eval(eval_fn, eval_every)
         losses: List[float] = []
         wfn = self._worker_batch_fn()
         while len(losses) < steps:
             chunk = min(log_every or steps, steps - len(losses))
+            if eval_fn is not None:
+                chunk = min(chunk, eval_every - self._data_idx % eval_every)
+            before = self._data_idx
             losses.extend(self._drive(chunk, wfn))
             if log_every:
                 print(f"push {self._data_idx:4d}  loss {losses[-1]:.4f}")
+            if eval_fn is not None and \
+                    self._data_idx // eval_every > before // eval_every:
+                self._record_eval(eval_fn)
         return losses
 
     def step(self, batch) -> float:
@@ -448,6 +506,9 @@ class _AsyncBase(RuntimeAdapter):
         led = self._server.ledger
         return {"pull_bytes": sum(led.pulled_bytes.values()),
                 "push_bytes": sum(led.pushed_bytes.values()),
+                "pull_wire_bytes": sum(led.pulled_wire_bytes.values()),
+                "push_wire_bytes": sum(led.pushed_wire_bytes.values()),
+                "push_compression_ratio": led.compression_ratio("push"),
                 "num_pulls": led.num_pulls,
                 "num_pushes": led.num_pushes,
                 "rejected_pushes": led.rejected_pushes,
@@ -492,7 +553,9 @@ class PSAsyncRuntime(_AsyncBase):
         from repro.ps import AsyncPSTrainer
         topo_cfg = config.schedule.topology or TopologyConfig()
         topo = topo_cfg.build(default_workers=len(jax.devices()))
-        costs = topo.topology_costs(layer_profiles(arch, self.shape))
+        comp = config.compression.build()
+        costs = topo.topology_costs(layer_profiles(arch, self.shape),
+                                    compressor=comp)
         decision, self.sync_makespan = consensus_decision(
             costs, config.schedule.strategy)
         plan = plan_from_decision(*decision, num_sched_layers(arch))
@@ -501,7 +564,8 @@ class PSAsyncRuntime(_AsyncBase):
             optimizer=config.build_optimizer(), topology=topo, plan=plan,
             staleness=config.execution.staleness or 0,
             throttle=config.execution.throttle,
-            aggregate=config.execution.aggregate, costs=costs)
+            aggregate=config.execution.aggregate, costs=costs,
+            compressor=comp)
 
     @property
     def _server(self):
@@ -534,11 +598,12 @@ class DynamicPSAsyncRuntime(_AsyncBase):
             throttle=config.execution.throttle,
             aggregate=config.execution.aggregate,
             strategy=config.schedule.strategy,
-            profiles=layer_profiles(arch, self.shape))
+            profiles=layer_profiles(arch, self.shape),
+            compressor=config.compression.build())
 
     @property
     def events(self):
-        return self.trainer.events
+        return tuple(self.trainer.events) + tuple(self._eval_events)
 
     @property
     def _server(self):

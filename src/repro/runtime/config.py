@@ -197,6 +197,51 @@ class ExecutionConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Gradient push compression (``repro.compress``) on the PS regimes.
+
+    ``scheme="int8"`` quantizes each push to int8 with per-tile fp32
+    scales; ``"topk"`` keeps the ``topk_fraction`` largest-magnitude
+    entries per flat buffer.  ``error_feedback`` carries each push's
+    compression error into the next one (per worker, per layer).  Pulls
+    always stay fp32 — the paper's asymmetric edge uplink is the
+    bottleneck the wire savings target.
+    """
+
+    scheme: str = "none"             # none | int8 | topk
+    topk_fraction: Optional[float] = None
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        from repro.compress import SCHEMES
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown compression scheme {self.scheme!r}; "
+                             f"choose from {sorted(SCHEMES)}")
+        if self.scheme == "topk":
+            if self.topk_fraction is None:
+                raise ValueError("scheme='topk' needs topk_fraction")
+            if not 0.0 < self.topk_fraction <= 1.0:
+                raise ValueError(f"topk_fraction must be in (0, 1], got "
+                                 f"{self.topk_fraction}")
+        elif self.topk_fraction is not None:
+            raise ValueError(f"topk_fraction only applies to scheme='topk' "
+                             f"(got scheme={self.scheme!r})")
+
+    @property
+    def enabled(self) -> bool:
+        return self.scheme != "none"
+
+    def build(self):
+        """The :class:`repro.compress.Compressor` (``None`` when off)."""
+        if not self.enabled:
+            return None
+        from repro.compress import make_compressor
+        return make_compressor(self.scheme,
+                               topk_fraction=self.topk_fraction,
+                               error_feedback=self.error_feedback)
+
+
+@dataclasses.dataclass(frozen=True)
 class MeasureConfig:
     """Where fc/bc cost vectors come from."""
 
@@ -241,6 +286,8 @@ class RuntimeConfig:
     execution: ExecutionConfig = dataclasses.field(
         default_factory=ExecutionConfig)
     measure: MeasureConfig = dataclasses.field(default_factory=MeasureConfig)
+    compression: CompressionConfig = dataclasses.field(
+        default_factory=CompressionConfig)
 
     def __post_init__(self):
         if self.runtime not in RUNTIME_REGIMES:
@@ -291,6 +338,11 @@ class RuntimeConfig:
                              "react to it — use runtime='dynamic-ps' or "
                              f"'dynamic-ps-async' (the {self.runtime!r} "
                              f"runtime plans once at startup)")
+        if self.compression.enabled and not regime.startswith("ps"):
+            raise ValueError(
+                f"compression rides the PS push path (segmented gradient "
+                f"uploads); runtime {self.runtime!r} is a {regime!r} regime "
+                f"— pick a ps-* runtime or set compression.scheme='none'")
         if self.schedule.drift_detect and self.runtime != "dynamic":
             raise ValueError("drift_detect re-schedules from observed step "
                              "times, which only the 'dynamic' runtime "
@@ -349,6 +401,7 @@ class RuntimeConfig:
             obj["schedule"] = ScheduleConfig(**sched)
         sub("execution", ExecutionConfig)
         sub("measure", MeasureConfig)
+        sub("compression", CompressionConfig)
         unknown = set(obj) - {f.name for f in dataclasses.fields(cls)}
         if unknown:
             raise ValueError(f"unknown RuntimeConfig fields "

@@ -4,14 +4,18 @@ One interface over all execution regimes — bucketed ZeRO, synchronous PS,
 bounded-staleness async PS, and their dynamic (re-planning) variants — so
 launchers, examples, and benchmarks drive any of them identically:
 
-* ``fit(steps)`` — run ``steps`` units of progress (training steps for
-  the synchronous regimes, accepted gradient pushes for the asynchronous
-  ones) against the configured data source; returns one loss per unit;
+* ``fit(steps, eval_fn=..., eval_every=...)`` — run ``steps`` units of
+  progress (training steps for the synchronous regimes, accepted
+  gradient pushes for the asynchronous ones) against the configured data
+  source; returns one loss per unit.  With an ``eval_fn`` (a zero-arg
+  callable returning a scalar loss), the runtime calls it every
+  ``eval_every`` units and records an :class:`EvalEvent` into
+  ``events``;
 * ``step(batch)`` — one unit of progress on an explicit batch (async
   regimes feed ``batch`` to every worker attempt until the next push
   commits);
 * ``events`` — the ``RescheduleEvent`` history (empty for static
-  regimes);
+  regimes) plus any ``EvalEvent`` records from ``fit(eval_fn=...)``;
 * ``timeline()`` — the regime's simulator view of the active plan
   (``IterationTimeline`` / ``PSTimeline`` for synchronous regimes, the
   cumulative ``AsyncRunLog`` for asynchronous ones; ``None`` where no
@@ -26,15 +30,26 @@ launchers, examples, and benchmarks drive any of them identically:
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Protocol, Sequence, \
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, \
     runtime_checkable
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalEvent:
+    """One evaluation recorded by ``fit(eval_fn=...)``."""
+
+    unit: int        # units of progress consumed when the eval ran
+    loss: float
 
 
 @runtime_checkable
 class Trainer(Protocol):
     """Uniform driver interface over every registered runtime."""
 
-    def fit(self, steps: int) -> List[float]:
+    def fit(self, steps: int, *, log_every: int = 0,
+            eval_fn: Optional[Callable[[], float]] = None,
+            eval_every: int = 0) -> List[float]:
         """Run ``steps`` units of progress; one loss per unit."""
         ...
 

@@ -214,8 +214,13 @@ def built():
 
     def get(runtime_name):
         if runtime_name not in cache:
-            (path,) = [p for p in smoke_config_paths()
-                       if RuntimeConfig.load(p).runtime == runtime_name]
+            # a runtime may ship feature-variant configs alongside its
+            # baseline (e.g. ps_async_int8.json) — pick the uncompressed one
+            paths = sorted(p for p in smoke_config_paths()
+                           if RuntimeConfig.load(p).runtime == runtime_name)
+            assert paths, f"no smoke config for {runtime_name}"
+            path = min(paths, key=lambda p:
+                       RuntimeConfig.load(p).compression.enabled)
             cache[runtime_name] = (build_runtime(RuntimeConfig.load(path)),
                                    path)
         return cache[runtime_name]
