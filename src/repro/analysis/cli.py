@@ -1,0 +1,104 @@
+"""``python -m repro.analysis`` — lint and verify subcommands.
+
+``lint`` walks source trees with the AST lints (jax never imported);
+``verify`` builds a runtime from a ``RuntimeConfig`` JSON and runs the
+HLO schedule-conformance passes.  Both print the human rendering, write
+the findings JSON with ``--json``, and exit non-zero iff any
+error-severity finding was produced — which is what gates CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.findings import (ERROR, Finding, findings_to_json,
+                                     render_findings)
+
+
+def _write_json(path: str, findings: List[Finding], **extra) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(findings_to_json(findings, **extra))
+        f.write("\n")
+
+
+def _exit_code(findings: List[Finding]) -> int:
+    return 1 if any(f.severity == ERROR for f in findings) else 0
+
+
+def _run_lint(args: argparse.Namespace) -> int:
+    from repro.analysis.lints import lint_paths
+    findings = lint_paths(args.paths)
+    print(render_findings(
+        findings,
+        header=f"lint over {', '.join(args.paths)}: "
+               f"{len(findings)} finding(s)"))
+    if args.json_path:
+        _write_json(args.json_path, findings, command="lint",
+                    paths=list(args.paths))
+    return _exit_code(findings)
+
+
+def _run_verify(args: argparse.Namespace) -> int:
+    # forge host devices BEFORE anything imports jax: the smoke configs
+    # need a real data axis (axis_size 1 lets XLA elide every collective,
+    # which would verify nothing)
+    if args.devices and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    from repro.analysis.runtime_verify import verify_runtime
+    from repro.runtime.config import RuntimeConfig
+    config = RuntimeConfig.load(args.config)
+    findings, info = verify_runtime(config, steps=args.steps)
+    print(render_findings(
+        findings,
+        header=f"verify {args.config} [{config.runtime}]: "
+               f"{len(findings)} finding(s)"))
+    if args.json_path:
+        _write_json(args.json_path, findings, command="verify",
+                    config=args.config, info=info)
+    return _exit_code(findings)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: determinism lints + HLO "
+                    "schedule-conformance verification")
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    lint_p = sub.add_parser(
+        "lint", help="run the AST determinism lints over files/trees")
+    lint_p.add_argument("paths", nargs="+",
+                        help="python files or directory trees")
+    lint_p.add_argument("--json", dest="json_path", default=None,
+                        help="also write the findings JSON here")
+
+    verify_p = sub.add_parser(
+        "verify", help="build a runtime and verify its compiled "
+                       "schedule against the plan")
+    verify_p.add_argument("--config", required=True,
+                          help="RuntimeConfig JSON "
+                               "(examples/runtime_configs/*.json)")
+    verify_p.add_argument("--steps", type=int, default=None,
+                          help="units of progress to run where needed "
+                               "(default: regime-appropriate minimum)")
+    verify_p.add_argument("--devices", type=int, default=2,
+                          help="forged host device count (default 2; 0 "
+                               "= leave XLA_FLAGS alone)")
+    verify_p.add_argument("--json", dest="json_path", default=None,
+                          help="also write the findings JSON here")
+
+    args = parser.parse_args(argv)
+    if args.command == "lint":
+        return _run_lint(args)
+    return _run_verify(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,362 @@
+"""Schedule-conformance verification over compiled HLO (layer 1).
+
+DynaComm's structural claim is that the compiled step contains *exactly*
+the collectives the DP decision prescribes: one all-gather (parameter
+pull) per forward bucket, one reduce-scatter (gradient push) per
+backward bucket, each moving exactly the ``FlatSpec`` flat-buffer bytes
+— and nothing else crossing replicas.  :func:`verify_schedule` checks a
+compiled HLO dump against a :class:`~repro.core.buckets.BucketPlan` and
+the trainer's specs; :func:`verify_cache` audits a
+:class:`~repro.runtime.replan.PlanStepCache` (one compilation per
+distinct plan); :func:`verify_wire_model` and
+:func:`verify_push_ledger` prove the compressed wire-byte accounting
+exact against an *independent* reimplementation of the compressor byte
+formulas.
+
+Expected operand bytes (empirically pinned against XLA's partitioner,
+see the golden fixtures):
+
+* all-gather of forward bucket ``b`` operates on the concatenated local
+  shards — ``4 * sum(padded_l // axis_size for l in b)`` bytes;
+* reduce-scatter of backward bucket ``b`` operates on the stacked
+  ``(axis_size, shard)`` gradient — ``4 * sum(padded_l for l in b)``
+  bytes (compressed pushes roundtrip to f32 *before* the collective, so
+  HLO operands stay f32 — wire compression is verified at the byte-model
+  layer instead);
+* one scalar all-reduce (the loss ``pmean``) is tolerated below
+  ``small_collective_bytes``.
+
+Pure stdlib + :mod:`repro.analysis.hlo`: no jax import, so conformance
+over golden fixtures runs without a compile.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import Counter
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.hlo import ModuleOrText, _as_module, collective_summary
+
+__all__ = [
+    "expected_ag_bytes", "expected_rs_bytes", "independent_wire_bytes",
+    "segment_wire_bytes", "verify_schedule", "verify_no_collectives",
+    "verify_cache", "verify_wire_model", "verify_push_ledger",
+]
+
+# Int8 wire layout: 1 byte/element + one fp32 scale per quantization
+# tile.  Deliberately NOT imported from repro.kernels.compress.ops.TILE:
+# this module re-derives the wire math independently of the code under
+# audit (a test pins the two constants to each other).
+INT8_TILE = 512
+
+#: Collectives at or below this operand size are treated as scalar-loss
+#: reductions (the ``pmean`` of the per-device loss) and not flagged.
+SMALL_COLLECTIVE_BYTES = 1024
+
+
+# ---------------------------------------------------------------------------
+# expected byte math
+# ---------------------------------------------------------------------------
+
+def expected_ag_bytes(specs: Sequence[Any], plan: Any, *,
+                      zero3: bool = False) -> List[int]:
+    """Expected all-gather operand bytes, one entry per gather.
+
+    With ``zero3`` every backward bucket containing a middle layer
+    re-pulls its full bucket (one extra gather of the same byte shape as
+    a forward gather of that bucket)."""
+    def bucket_bytes(bucket):
+        return 4 * sum(specs[l].padded // specs[l].axis_size for l in bucket)
+
+    out = [bucket_bytes(b) for b in plan.forward]
+    if zero3:
+        num_layers = len(specs)
+        out += [bucket_bytes(b) for b in plan.backward
+                if any(0 < l < num_layers - 1 for l in b)]
+    return out
+
+
+def expected_rs_bytes(specs: Sequence[Any], plan: Any) -> List[int]:
+    """Expected reduce-scatter operand bytes, one entry per backward
+    bucket (the stacked ``(axis_size, shard)`` gradient)."""
+    return [4 * sum(specs[l].padded for l in b) for b in plan.backward]
+
+
+def independent_wire_bytes(compressor: Optional[Any],
+                           logical_bytes: float) -> float:
+    """Wire bytes of one fp32 buffer, re-derived from the published
+    formulas rather than ``compressor.wire_bytes`` (which is the code
+    under audit)."""
+    scheme = getattr(compressor, "scheme", "none") if compressor else "none"
+    if scheme == "none":
+        return float(logical_bytes)
+    n = logical_bytes / 4.0
+    if scheme == "int8":
+        return n + 4.0 * math.ceil(n / INT8_TILE)
+    if scheme == "topk":
+        return 8.0 * max(1.0, math.ceil(compressor.fraction * n))
+    raise ValueError(f"unknown compression scheme {scheme!r}")
+
+
+def segment_wire_bytes(specs: Sequence[Any], bucket: Sequence[int],
+                       compressor: Optional[Any]) -> int:
+    """Wire bytes of one push segment under the independent byte model
+    (mirrors ``PSServer.push_wire_bytes``: per-layer payloads plus one
+    per-segment header, rounded once)."""
+    overhead = getattr(compressor, "segment_overhead_bytes", 0.0) \
+        if compressor else 0.0
+    return int(round(sum(independent_wire_bytes(compressor,
+                                                specs[l].total * 4)
+                         for l in bucket) + overhead))
+
+
+# ---------------------------------------------------------------------------
+# conformance passes
+# ---------------------------------------------------------------------------
+
+def _multiset_diff(expected: Sequence[int], observed: Sequence[int]
+                   ) -> Tuple[List[int], List[int]]:
+    """(missing-from-observed, unexpected-in-observed)."""
+    exp, obs = Counter(expected), Counter(observed)
+    missing = sorted((exp - obs).elements())
+    extra = sorted((obs - exp).elements())
+    return missing, extra
+
+
+def verify_schedule(hlo: ModuleOrText, plan: Any, specs: Sequence[Any], *,
+                    compressor: Optional[Any] = None, zero3: bool = False,
+                    small_collective_bytes: int = SMALL_COLLECTIVE_BYTES,
+                    context: str = "") -> List[Finding]:
+    """Check one compiled step's HLO against its ``BucketPlan``.
+
+    Returns an empty list iff the module contains exactly one all-gather
+    per forward bucket (plus zero3 re-gathers) and one reduce-scatter
+    per backward bucket, with operand bytes matching the ``FlatSpec``
+    byte math as a multiset, and no other cross-replica collective above
+    the scalar-loss threshold.  With a single-device ``axis_size`` XLA
+    elides the collectives entirely, so only the stray-collective check
+    runs.  The wire-byte model (compression exactness) is checked by
+    :func:`verify_wire_model`, appended here when a compressor is given.
+    """
+    findings: List[Finding] = []
+    ctx = {"context": context} if context else {}
+    summary = collective_summary(hlo)
+    axis_size = specs[0].axis_size if len(specs) else 1
+
+    if axis_size > 1:
+        exp_ag = expected_ag_bytes(specs, plan, zero3=zero3)
+        exp_rs = expected_rs_bytes(specs, plan)
+        obs_ag = [b for _, b in summary["all-gather"]]
+        obs_rs = [b for _, b in summary["reduce-scatter"]]
+
+        if len(obs_ag) != len(exp_ag):
+            findings.append(Finding(
+                code="SCHED-AG-COUNT",
+                message=f"{len(obs_ag)} all-gathers compiled, plan "
+                        f"prescribes {len(exp_ag)} "
+                        f"({len(plan.forward)} forward buckets"
+                        + (", zero3 re-gathers included)" if zero3 else ")"),
+                detail={"expected": len(exp_ag), "observed": len(obs_ag),
+                        **ctx}))
+        if len(obs_rs) != len(exp_rs):
+            findings.append(Finding(
+                code="SCHED-RS-COUNT",
+                message=f"{len(obs_rs)} reduce-scatters compiled, plan "
+                        f"prescribes {len(exp_rs)} backward buckets",
+                detail={"expected": len(exp_rs), "observed": len(obs_rs),
+                        **ctx}))
+
+        for code, kind, exp, obs in (
+                ("SCHED-AG-BYTES", "all-gather", exp_ag, obs_ag),
+                ("SCHED-RS-BYTES", "reduce-scatter", exp_rs, obs_rs)):
+            missing, extra = _multiset_diff(exp, obs)
+            if missing or extra:
+                findings.append(Finding(
+                    code=code,
+                    message=f"{kind} operand bytes do not match the "
+                            f"FlatSpec byte math: missing {missing}, "
+                            f"unexpected {extra}",
+                    detail={"expected": sorted(exp),
+                            "observed": sorted(obs), **ctx}))
+
+    # stray cross-replica collectives outside the plan
+    for kind in ("all-to-all", "collective-permute"):
+        for instr, nbytes in summary[kind]:
+            findings.append(Finding(
+                code="SCHED-STRAY-COLLECTIVE",
+                message=f"stray {kind} ({nbytes} operand bytes, "
+                        f"%{instr.name}) — the plan prescribes none",
+                detail={"opcode": kind, "name": instr.name,
+                        "bytes": nbytes, **ctx}))
+    for instr, nbytes in summary["all-reduce"]:
+        if nbytes > small_collective_bytes:
+            findings.append(Finding(
+                code="SCHED-STRAY-COLLECTIVE",
+                message=f"all-reduce of {nbytes} operand bytes "
+                        f"(%{instr.name}) exceeds the scalar-loss "
+                        f"threshold ({small_collective_bytes} B) — "
+                        f"gradient traffic must go through the "
+                        f"scheduled reduce-scatters",
+                detail={"opcode": "all-reduce", "name": instr.name,
+                        "bytes": nbytes, **ctx}))
+
+    if compressor is not None:
+        findings.extend(verify_wire_model(specs, plan, compressor,
+                                          context=context))
+    return findings
+
+
+def verify_no_collectives(hlo: ModuleOrText, *,
+                          small_collective_bytes: int =
+                          SMALL_COLLECTIVE_BYTES,
+                          context: str = "") -> List[Finding]:
+    """A module that must contain **no** cross-replica traffic at all
+    (the local runtime's step, the async trainers' single-jit gradient
+    — their communication is explicit server messages, never
+    collectives).  Sub-threshold scalar reductions are tolerated."""
+    findings: List[Finding] = []
+    ctx = {"context": context} if context else {}
+    for kind, entries in collective_summary(hlo).items():
+        for instr, nbytes in entries:
+            if nbytes <= small_collective_bytes:
+                continue
+            findings.append(Finding(
+                code="SCHED-STRAY-COLLECTIVE",
+                message=f"{kind} of {nbytes} operand bytes "
+                        f"(%{instr.name}) in a module that must contain "
+                        f"no cross-replica collectives",
+                detail={"opcode": kind, "name": instr.name,
+                        "bytes": nbytes, **ctx}))
+    return findings
+
+
+def verify_wire_model(specs: Sequence[Any], plan: Any, compressor: Any, *,
+                      context: str = "") -> List[Finding]:
+    """Exactness of the compressed wire-byte accounting.
+
+    Recomputes every backward segment's wire bytes from the published
+    int8/top-k formulas (:func:`independent_wire_bytes`) and requires
+    the repo's own ``compressor.wire_bytes`` accounting (what
+    ``PSServer.push_wire_bytes`` and the ledgers record) to agree to the
+    integer."""
+    findings: List[Finding] = []
+    ctx = {"context": context} if context else {}
+    overhead = getattr(compressor, "segment_overhead_bytes", 0.0)
+    for i, bucket in enumerate(plan.backward):
+        expected = segment_wire_bytes(specs, bucket, compressor)
+        actual = int(round(sum(
+            float(compressor.wire_bytes(specs[l].total * 4))
+            for l in bucket) + overhead))
+        if actual != expected:
+            findings.append(Finding(
+                code="SCHED-WIRE-BYTES",
+                message=f"backward segment {i} ({tuple(bucket)}): "
+                        f"compressor accounts {actual} wire bytes, "
+                        f"independent {compressor.scheme} formula gives "
+                        f"{expected}",
+                detail={"segment": list(bucket), "expected": expected,
+                        "actual": actual, "scheme": compressor.scheme,
+                        **ctx}))
+    return findings
+
+
+def verify_cache(cache: Any, *, specs: Optional[Sequence[Any]] = None,
+                 zero3: bool = False, context: str = "") -> List[Finding]:
+    """Retrace audit of a ``PlanStepCache``: exactly one compilation per
+    distinct ``BucketPlan``, and each cached step's collective counts
+    match its plan's bucket counts."""
+    findings: List[Finding] = []
+    ctx = {"context": context} if context else {}
+    plans = cache.plans
+    if cache.traces != len(plans):
+        findings.append(Finding(
+            code="SCHED-CACHE-RETRACE",
+            message=f"{cache.traces} compilations for {len(plans)} "
+                    f"distinct plans — revisited plans must be served "
+                    f"from the cache",
+            detail={"traces": cache.traces, "plans": len(plans), **ctx}))
+    single_device = specs is not None and len(specs) \
+        and specs[0].axis_size == 1
+    for plan in plans:
+        n_ag, n_rs = cache.hlo_counts(plan)
+        exp_ag = len(plan.forward)
+        if zero3:
+            num_layers = max(max(b) for b in plan.forward) + 1
+            exp_ag += sum(1 for b in plan.backward
+                          if any(0 < l < num_layers - 1 for l in b))
+        exp_rs = len(plan.backward)
+        # one device: XLA either elides the single-replica collectives
+        # or compiles them as degenerate ops — both shapes are conformant
+        ok = {(exp_ag, exp_rs), (0, 0)} if single_device \
+            else {(exp_ag, exp_rs)}
+        if (n_ag, n_rs) not in ok:
+            findings.append(Finding(
+                code="SCHED-CACHE-COUNTS",
+                message=f"cached step for plan {plan} compiled "
+                        f"{n_ag} all-gathers / {n_rs} reduce-scatters, "
+                        f"expected {exp_ag} / {exp_rs}"
+                        + (" (or 0 / 0 elided)" if single_device else ""),
+                detail={"expected": [exp_ag, exp_rs],
+                        "observed": [n_ag, n_rs], **ctx}))
+    return findings
+
+
+def verify_push_ledger(ledger: Any, plans_by_worker: Dict[int, Any],
+                       specs: Sequence[Any], compressor: Optional[Any], *,
+                       context: str = "") -> List[Finding]:
+    """Per-worker wire-byte audit of a ``TransferLedger``.
+
+    Each worker's recorded ``pushed_bytes`` must decompose exactly into
+    its plan's backward segments walked in order (whole iterations plus
+    at most one partial), and the wire bytes implied by that
+    decomposition under the independent byte model must equal the
+    recorded ``pushed_wire_bytes`` to the integer — proving the
+    compressed accounting exact for every committed push, including
+    int8/top-k payloads."""
+    findings: List[Finding] = []
+    ctx = {"context": context} if context else {}
+    total_segments = 0
+    for worker, logical_target in sorted(ledger.pushed_bytes.items()):
+        plan = plans_by_worker[worker]
+        seg_logical = [sum(specs[l].total * 4 for l in b)
+                       for b in plan.backward]
+        seg_wire = [segment_wire_bytes(specs, b, compressor)
+                    for b in plan.backward]
+        cap = 1 + len(seg_logical) * (
+            1 + logical_target // max(1, sum(seg_logical)))
+        logical = wire = nseg = 0
+        while logical < logical_target and nseg < cap:
+            logical += seg_logical[nseg % len(seg_logical)]
+            wire += seg_wire[nseg % len(seg_wire)]
+            nseg += 1
+        if logical != logical_target:
+            findings.append(Finding(
+                code="SCHED-LEDGER",
+                message=f"worker {worker}: recorded {logical_target} "
+                        f"pushed bytes do not decompose into plan-order "
+                        f"backward segments (nearest prefix {logical})",
+                detail={"worker": worker, "recorded": logical_target,
+                        "nearest_prefix": logical, **ctx}))
+            continue
+        recorded_wire = ledger.pushed_wire_bytes.get(worker, 0)
+        if wire != recorded_wire:
+            findings.append(Finding(
+                code="SCHED-LEDGER",
+                message=f"worker {worker}: ledger records "
+                        f"{recorded_wire} pushed wire bytes, the "
+                        f"independent byte model implies {wire} for the "
+                        f"same {nseg} segments",
+                detail={"worker": worker, "recorded": recorded_wire,
+                        "expected": wire, "segments": nseg, **ctx}))
+        total_segments += nseg
+    if ledger.pushed_bytes and ledger.num_pushes != total_segments:
+        findings.append(Finding(
+            code="SCHED-LEDGER",
+            message=f"ledger counts {ledger.num_pushes} push messages, "
+                    f"the per-worker byte decomposition implies "
+                    f"{total_segments} segments",
+            detail={"num_pushes": ledger.num_pushes,
+                    "segments": total_segments, **ctx}))
+    return findings

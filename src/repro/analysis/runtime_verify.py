@@ -1,0 +1,171 @@
+"""Drive a built runtime through the conformance passes.
+
+``verify_runtime(config)`` is the engine behind
+``python -m repro.analysis verify``: it builds the runtime via
+:func:`repro.runtime.build_runtime`, lowers/compiles one training step
+(or, for the dynamic regimes, runs just past a re-plan boundary so the
+``PlanStepCache`` holds real compiled steps), and checks
+
+* the compiled HLO against the active ``BucketPlan`` + ``FlatSpec``
+  byte math (:func:`~repro.analysis.conformance.verify_schedule`);
+* the compiled-step cache: one compilation per distinct plan
+  (:func:`~repro.analysis.conformance.verify_cache`);
+* the compressed wire-byte accounting, exact to the integer
+  (:func:`~repro.analysis.conformance.verify_wire_model`, and for the
+  event-loop regimes the per-worker ledger decomposition of
+  :func:`~repro.analysis.conformance.verify_push_ledger`);
+* that modules with no scheduled communication (the local step, the
+  async trainers' single-jit gradient) compile zero cross-replica
+  collectives.
+
+This module imports jax (via ``repro.runtime``); the CLI imports it
+lazily so ``lint`` stays jax-free.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analysis.conformance import (segment_wire_bytes, verify_cache,
+                                        verify_no_collectives,
+                                        verify_push_ledger, verify_schedule,
+                                        verify_wire_model)
+from repro.analysis.findings import Finding
+
+__all__ = ["verify_runtime"]
+
+
+def verify_runtime(config: Any, *, steps: Optional[int] = None
+                   ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Verify one ``RuntimeConfig``; returns ``(findings, info)``.
+
+    ``steps`` overrides how many units of progress to run where running
+    is needed (dynamic regimes default to one step past the first
+    re-plan boundary; async regimes to a couple of committed pushes).
+    """
+    from repro.runtime import build_runtime
+    rt = build_runtime(config)
+    regime = config.runtime
+    if regime == "local":
+        return _verify_local(rt)
+    if regime in ("zero", "ps"):
+        return _verify_static(rt, config, steps)
+    if regime in ("dynamic", "dynamic-ps"):
+        return _verify_dynamic(rt, config, steps)
+    if regime in ("ps-async", "dynamic-ps-async"):
+        return _verify_async(rt, config, regime, steps)
+    raise ValueError(f"no conformance driver for runtime {regime!r}")
+
+
+def _info(regime: str, **extra: Any) -> Dict[str, Any]:
+    return {"runtime": regime, **extra}
+
+
+def _plan_obj(plan: Any) -> Dict[str, Any]:
+    return {"forward": [list(b) for b in plan.forward],
+            "backward": [list(b) for b in plan.backward]}
+
+
+def _verify_local(rt: Any) -> Tuple[List[Finding], Dict[str, Any]]:
+    batch = rt._batch_fn(0)
+    hlo = rt._step_fn.lower(rt._params, rt._opt_state,
+                            batch).compile().as_text()
+    findings = verify_no_collectives(hlo, context="local step")
+    return findings, _info("local", checked=["no-collectives"])
+
+
+def _verify_static(rt: Any, config: Any, steps: Optional[int]
+                   ) -> Tuple[List[Finding], Dict[str, Any]]:
+    tr = rt.trainer
+    batch = rt._batch_fn(0)
+    hlo = rt._step_fn.lower(rt._state, batch).compile().as_text()
+    compressor = getattr(tr, "compressor", None)
+    zero3 = config.execution.zero3
+    findings = verify_schedule(hlo, rt.plan, tr.specs,
+                               compressor=compressor, zero3=zero3,
+                               context=f"{config.runtime} step")
+    # ledger audit over a short run: the adapter's fleet-wide push wire
+    # accounting must equal steps x workers x the independent per-segment
+    # byte model
+    n = steps if steps is not None else 1
+    rt.fit(n)
+    workers = tr.topology.num_workers if hasattr(tr, "topology") \
+        else tr.axis_size
+    expected_wire = n * workers * sum(
+        segment_wire_bytes(tr.specs, b, compressor)
+        for b in rt.plan.backward)
+    recorded = rt.ledger["push_wire_bytes"]
+    if recorded != expected_wire:
+        findings.append(Finding(
+            code="SCHED-LEDGER",
+            message=f"runtime ledger records {recorded} push wire bytes "
+                    f"over {n} step(s) x {workers} worker(s); the "
+                    f"independent byte model gives {expected_wire}",
+            detail={"recorded": recorded, "expected": expected_wire,
+                    "steps": n, "workers": workers}))
+    return findings, _info(
+        config.runtime, plan=_plan_obj(rt.plan), steps_run=n,
+        compression=getattr(compressor, "scheme", "none")
+        if compressor else "none",
+        checked=["schedule", "wire-model", "ledger"])
+
+
+def _verify_dynamic(rt: Any, config: Any, steps: Optional[int]
+                    ) -> Tuple[List[Finding], Dict[str, Any]]:
+    # run one step past the first re-plan boundary so the cache holds at
+    # least one (usually two) genuinely compiled plans
+    n = steps if steps is not None else config.schedule.reschedule_every + 1
+    rt.fit(n)
+    tr = rt.trainer
+    base = tr.base
+    compressor = getattr(tr, "compressor", None)
+    zero3 = config.execution.zero3
+    findings = verify_cache(tr._cache, specs=base.specs, zero3=zero3,
+                            context=f"{config.runtime} cache")
+    for i, plan in enumerate(tr.plans_seen):
+        # verify_schedule handles axis_size == 1 itself (XLA elides the
+        # collectives; only stray + wire-model checks run)
+        findings.extend(verify_schedule(
+            tr._cache.hlo_text(plan), plan, base.specs,
+            compressor=compressor, zero3=zero3,
+            context=f"{config.runtime} plan {i}"))
+    return findings, _info(
+        config.runtime, steps_run=n, plans_seen=len(tr.plans_seen),
+        traces=tr.traces, cache_hits=tr.cache_hits,
+        compression=getattr(compressor, "scheme", "none")
+        if compressor else "none",
+        checked=["schedule", "cache", "wire-model"])
+
+
+def _verify_async(rt: Any, config: Any, regime: str, steps: Optional[int]
+                  ) -> Tuple[List[Finding], Dict[str, Any]]:
+    async_tr = rt.trainer if regime == "ps-async" else rt.trainer.trainer
+    # stay inside the first plan epoch so the per-worker ledger
+    # decomposition runs against a single plan sequence per worker
+    n = steps if steps is not None else 2
+    if regime == "dynamic-ps-async":
+        n = min(n, config.schedule.reschedule_every)
+    rt.fit(n)
+
+    # the async regimes communicate through explicit server messages;
+    # their single-jit gradient must compile zero collectives
+    batch = rt._batch_fn(0)
+    hlo = async_tr._grad_fn.lower(async_tr.layer_params(),
+                                  batch).compile().as_text()
+    findings = verify_no_collectives(hlo, context=f"{regime} grad")
+
+    specs = async_tr.specs
+    compressor = async_tr.compressor
+    plans = async_tr.plans
+    if compressor is not None:
+        for plan in dict.fromkeys(plans):
+            findings.extend(verify_wire_model(specs, plan, compressor,
+                                              context=f"{regime} plan"))
+    findings.extend(verify_push_ledger(
+        async_tr.server.ledger, dict(enumerate(plans)), specs, compressor,
+        context=f"{regime} ledger"))
+    return findings, _info(
+        regime, pushes_run=n, workers=len(plans),
+        compression=getattr(compressor, "scheme", "none")
+        if compressor else "none",
+        checked=["no-collectives", "wire-model", "push-ledger"])

@@ -4,9 +4,9 @@ the ZeRO trainer (paper pull/push procedures as real ring collectives)."""
 from repro.dist.collectives import (FlatSpec, flatten_tree, gather_bucket,
                                     make_flat_spec, reduce_scatter_bucket,
                                     unflatten_tree)
-from repro.dist.dynamic import (DynamicTrainer, hlo_collective_counts,
-                                sequential_plan)
-from repro.runtime.replan import RescheduleEvent
+from repro.dist.dynamic import DynamicTrainer
+from repro.runtime.replan import (RescheduleEvent, hlo_collective_counts,
+                                  sequential_plan)
 from repro.dist.sharding import (batch_shardings, cache_shardings,
                                  param_pspec, params_shardings)
 from repro.dist.zero import ZeroTrainer

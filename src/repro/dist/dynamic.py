@@ -47,12 +47,13 @@ from repro.models import model as model_lib
 from repro.models.profiles import layer_profiles
 from repro.optim import Optimizer
 from repro.runtime.measure import measure_layer_times, measurement_due
-from repro.runtime.replan import (ReplanMixin, hlo_collective_counts,
-                                  sequential_plan)
+from repro.runtime.replan import ReplanMixin
+from repro.runtime.replan import sequential_plan as _sequential_plan
 
-__all__ = ["DynamicTrainer", "hlo_collective_counts", "sequential_plan"]
+__all__ = ["DynamicTrainer"]
 
-_MOVED = ("PlanStepCache", "RescheduleEvent")
+_MOVED = ("PlanStepCache", "RescheduleEvent", "hlo_collective_counts",
+          "sequential_plan")
 
 
 def __getattr__(name: str):
@@ -111,7 +112,7 @@ class DynamicTrainer(ReplanMixin):
         self.hook = LayerTimingHook(warmup=self.measure_warmup)
         Ls = model_lib.num_sched_layers(self.cfg)
         self.base = ZeroTrainer(cfg=self.cfg, mesh=self.mesh,
-                                plan=sequential_plan(Ls),
+                                plan=_sequential_plan(Ls),
                                 optimizer=self.optimizer, zero3=self.zero3,
                                 axis_name=self.axis_name,
                                 aux_weight=self.aux_weight)

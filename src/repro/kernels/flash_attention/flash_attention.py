@@ -22,6 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro._compat.pallas import CompilerParams as _CompilerParams
+from repro._compat.pallas import resolve_interpret
 
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
@@ -91,7 +92,7 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                            causal: bool = True, window: int = 0,
                            softcap: float = 0.0, bq: int = DEFAULT_BQ,
                            bk: int = DEFAULT_BK, scale: float | None = None,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool | None = None) -> jnp.ndarray:
     """q,k,v: (BH, T, hd) head-major; T % bq == T % bk == 0.
 
     ``scale`` must be 1/sqrt(true head dim) when hd is lane-padded.
@@ -124,5 +125,5 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

@@ -28,7 +28,7 @@ def _pad_head(x, mult=128):
 @functools.partial(jax.custom_vjp,
                    nondiff_argnums=(3, 4, 5, 6, 7, 8))
 def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
-                    bq=128, bk=128, interpret=True):
+                    bq=128, bk=128, interpret=None):
     """q: (B, H, Tq, hd); k,v: (B, Hkv, Tk, hd) → (B, H, Tq, hd)."""
     b, h, tq, _ = q.shape
     hkv = k.shape[1]

@@ -18,7 +18,7 @@ from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def rglru_scan(a: jnp.ndarray, x: jnp.ndarray, bt: int = 128, bw: int = 128,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """h_t = a_t h_{t-1} + x_t over axis 1; a, x: (B, T, W)."""
     b, t, w = a.shape
     pt = (-t) % bt

@@ -25,6 +25,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro._compat.pallas import CompilerParams as _CompilerParams
+from repro._compat.pallas import resolve_interpret
 
 DEFAULT_BT = 128
 DEFAULT_BW = 128
@@ -51,7 +52,7 @@ def _rglru_kernel(a_ref, x_ref, h_ref, carry_ref, *, bt: int):
 
 def rglru_scan_pallas(a: jnp.ndarray, x: jnp.ndarray, *,
                       bt: int = DEFAULT_BT, bw: int = DEFAULT_BW,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool | None = None) -> jnp.ndarray:
     """a, x: (B, T, W); T % bt == 0 == W % bw → h (B, T, W)."""
     b, t, w = a.shape
     assert t % bt == 0 and w % bw == 0
@@ -68,5 +69,5 @@ def rglru_scan_pallas(a: jnp.ndarray, x: jnp.ndarray, *,
         scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, x)

@@ -1,35 +1,23 @@
 """Post-compile HLO analysis: collective traffic + roofline terms.
 
-``collective_bytes`` parses the partitioned HLO text (``compiled.as_text()``)
-and sums operand bytes of every all-gather / all-reduce / reduce-scatter /
-all-to-all / collective-permute — the quantity ``cost_analysis`` does not
-report.  ``roofline`` combines it with HLO FLOPs/bytes into the three terms
-of EXPERIMENTS.md §Roofline.
+``collective_bytes`` sums operand bytes of every all-gather / all-reduce
+/ reduce-scatter / all-to-all / collective-permute — the quantity
+``cost_analysis`` does not report.  The parsing lives in the structured
+walker of :mod:`repro.analysis.hlo` (this module used to carry its own
+regex scraper; ``repro.analysis`` promoted it, fixing the async
+``-start``/``-done`` double count and tuple-operand leaf summing on the
+way).  ``roofline`` combines collective bytes with HLO FLOPs/bytes into
+the three terms of EXPERIMENTS.md §Roofline.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Dict
 
+from repro.analysis.hlo import collective_summary
 from repro.core.netmodel import (TPU_HBM_BW, TPU_ICI_BW_PER_LINK,
                                  TPU_PEAK_FLOPS_BF16)
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
-# "  %name = dtype[dims]{layout} opcode(operand, ...)" — tuple types allowed
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
-                     r"(\(.*?\)|[\w\[\]{},:#\d]+)\s+([\w\-]+)\((.*)$")
-_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
 
 
 def cost_analysis_dict(compiled) -> Dict:
@@ -41,65 +29,19 @@ def cost_analysis_dict(compiled) -> Dict:
     return cost or {}
 
 
-def _shape_bytes(type_str: str) -> int:
-    """Bytes of an HLO type string, e.g. 'bf16[8,128]{1,0}' or a tuple."""
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Per-op-kind operand bytes summed over the module (per device).
+    """Per-op-kind operand bytes summed over the module (per device),
+    plus a ``"_counts"`` entry with per-kind instruction counts.
 
-    Depending on the XLA version the printer writes operands either bare
-    (``all-gather(%p0)``) or with their type inline
-    (``all-gather(f32[1,16]{1,0} %bitcast)``).  Inline types are parsed
-    directly; bare names are resolved against a name → output-type map
-    built over all instruction definitions.
+    Both XLA printer styles are handled (bare ``%name`` operands and
+    inline-typed ``f32[1,16]{1,0} %name``); async ``-start``/``-done``
+    pairs count once, tuple-typed operands sum all leaves.
     """
-    defs: Dict[str, str] = {}
-    found = []
-    for line in hlo_text.splitlines():
-        m = _DEF_RE.match(line)
-        if not m:
-            continue
-        name, type_str, opcode, rest = m.groups()
-        defs[name] = type_str
-        base = opcode[:-6] if opcode.endswith("-start") else opcode
-        if base in _COLLECTIVES:
-            depth, end = 1, len(rest)
-            for i, ch in enumerate(rest):  # operand list up to matching ')'
-                if ch == "(":
-                    depth += 1
-                elif ch == ")":
-                    depth -= 1
-                    if depth == 0:
-                        end = i
-                        break
-            found.append((base, rest[:end]))
-
-    out = {k: 0 for k in _COLLECTIVES}
-    counts = {k: 0 for k in _COLLECTIVES}
-    for kind, operands in found:
-        # inline style: every operand carries its own "dtype[dims]{...}"
-        total = _shape_bytes(operands)
-        if total == 0:
-            # bare style: resolve "%name" operands against the def map
-            # (names contain no commas, so the split is safe here)
-            for op in operands.split(","):
-                m = _OPERAND_RE.match(op.strip())
-                if m and m.group(1) in defs:
-                    total += _shape_bytes(defs[m.group(1)])
-        out[kind] += total
-        counts[kind] += 1
-    out["_counts"] = counts
+    summary = collective_summary(hlo_text)
+    out: Dict[str, int] = {kind: sum(b for _, b in entries)
+                           for kind, entries in summary.items()}
+    out["_counts"] = {kind: len(entries)
+                     for kind, entries in summary.items()}
     return out
 
 

@@ -40,6 +40,7 @@ bookkeeping is shared with the ZeRO driver via
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -57,6 +58,22 @@ from repro.ps.topology import TopologySchedule, as_topology_schedule
 from repro.ps.worker import PSTrainer
 from repro.runtime.measure import measure_layer_times, measurement_due
 from repro.runtime.replan import ReplanMixin
+
+_MOVED = ("PlanStepCache", "RescheduleEvent", "hlo_collective_counts",
+          "sequential_plan")
+
+
+def __getattr__(name: str):
+    # deprecation shims mirroring repro.dist.dynamic: the re-planning
+    # machinery PR 4 grew here was hoisted to repro.runtime.replan
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.ps.dynamic.{name} moved to repro.runtime.replan; "
+            f"this alias will be removed",
+            DeprecationWarning, stacklevel=2)
+        from repro.runtime import replan
+        return getattr(replan, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def profiles_from_specs(specs, *, flops_per_param: float = 4.0

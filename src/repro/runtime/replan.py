@@ -31,14 +31,14 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.analysis.hlo import collective_counts as _collective_counts
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.core.buckets import BucketPlan
-from repro.launch.hlo_analysis import collective_bytes
 
 
 def hlo_collective_counts(hlo_text: str) -> Tuple[int, int]:
     """(#all-gathers, #reduce-scatters) in a compiled HLO dump."""
-    counts = collective_bytes(hlo_text)["_counts"]
+    counts = _collective_counts(hlo_text)
     return counts["all-gather"], counts["reduce-scatter"]
 
 
@@ -68,6 +68,7 @@ class PlanStepCache:
     def __init__(self):
         self._steps: Dict[BucketPlan, Callable] = {}
         self._hlo: Dict[BucketPlan, Tuple[int, int]] = {}
+        self._hlo_text: Dict[BucketPlan, str] = {}
         self.traces = 0                # compile-cache misses
         self.hits = 0                  # plan *swaps* served from the cache
 
@@ -81,6 +82,13 @@ class PlanStepCache:
             raise KeyError(f"plan {plan} has no compiled step yet")
         return self._hlo[plan]
 
+    def hlo_text(self, plan: BucketPlan) -> str:
+        """The compiled HLO dump of a cached plan's step (kept so the
+        conformance pass can audit every plan without recompiling)."""
+        if plan not in self._hlo_text:
+            raise KeyError(f"plan {plan} has no compiled step yet")
+        return self._hlo_text[plan]
+
     def step_for(self, plan: BucketPlan, build_step: Callable[[], Callable],
                  state, batch, *, count_hit: bool) -> Tuple[Callable, bool]:
         """The compiled step for ``plan``, compiling via ``build_step()``
@@ -93,7 +101,9 @@ class PlanStepCache:
             return self._steps[plan], False
         self.traces += 1
         compiled = jax.jit(build_step()).lower(state, batch).compile()
-        self._hlo[plan] = hlo_collective_counts(compiled.as_text())
+        text = compiled.as_text()
+        self._hlo[plan] = hlo_collective_counts(text)
+        self._hlo_text[plan] = text
         self._steps[plan] = compiled
         return compiled, True
 

@@ -20,7 +20,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 import json
-import re
 
 import jax
 import numpy as np
@@ -36,14 +35,14 @@ from repro.models import num_sched_layers
 from repro.models.profiles import layer_profiles
 from repro.optim import adamw
 from repro.ps import PSTopology, PSTrainer, asymmetric_link
+from repro.runtime.replan import hlo_collective_counts
 
 B, T, STEPS = 8, 32, 3
 
 
 def hlo_counts(step, state, batch):
     hlo = step.lower(state, batch).compile().as_text()
-    return (len(re.findall(r"\ball-gather(?:-start)?\(", hlo)),
-            len(re.findall(r"\breduce-scatter(?:-start)?\(", hlo)))
+    return hlo_collective_counts(hlo)
 
 
 def main():

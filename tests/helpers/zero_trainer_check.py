@@ -15,13 +15,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 import json
-import re
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.analysis import collective_counts
 from repro.configs import get_config
 from repro.core import plan_from_decision, random_costs, schedule
 from repro.dist.zero import ZeroTrainer
@@ -47,8 +47,8 @@ def main():
         state = tr.init_state(jax.random.PRNGKey(0))
         step = jax.jit(tr.build_train_step())
         hlo = step.lower(state, batch).compile().as_text()
-        n_ag = len(re.findall(r"\ball-gather(?:-start)?\(", hlo))
-        n_rs = len(re.findall(r"\breduce-scatter(?:-start)?\(", hlo))
+        counts = collective_counts(hlo)
+        n_ag, n_rs = counts["all-gather"], counts["reduce-scatter"]
         losses = []
         for _ in range(3):
             state, loss = step(state, batch)
@@ -76,7 +76,7 @@ def main():
                       if any(0 < l < Ls - 1 for l in bk))
     out["zero3"] = {
         "losses": losses3,
-        "ag": len(re.findall(r"\ball-gather(?:-start)?\(", hlo3)),
+        "ag": collective_counts(hlo3)["all-gather"],
         "expected_ag": len(plan.forward) + mid_buckets,
     }
 

@@ -1,0 +1,660 @@
+"""Tests for ``repro.analysis``: the structured HLO parser over golden
+fixtures, schedule-conformance over all four scheduling strategies,
+mutation self-tests (corrupted plans / tampered HLO / lying compressors
+must be flagged), the AST determinism lints, and the CLI."""
+
+import json
+import os
+import pathlib
+import re
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import pytest
+
+from repro.analysis import (collective_counts, collective_summary,
+                            lint_paths, lint_source, parse_hlo, type_bytes,
+                            verify_cache, verify_no_collectives,
+                            verify_push_ledger, verify_schedule,
+                            verify_wire_model)
+from repro.analysis.conformance import (INT8_TILE, expected_ag_bytes,
+                                        expected_rs_bytes,
+                                        independent_wire_bytes,
+                                        segment_wire_bytes)
+from repro.analysis.findings import Finding, findings_to_json
+from repro.analysis.lints import LintConfig
+from repro.core import plan_from_decision, random_costs, schedule
+from repro.core.buckets import BucketPlan
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src" / "repro"
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "hlo"
+CONFIGS = REPO / "examples" / "runtime_configs"
+
+STRATEGIES = ("sequential", "lbl", "ibatch", "dynacomm")
+
+
+def fixture(name):
+    return (FIXTURES / name).read_text()
+
+
+# ---------------------------------------------------------------------------
+# HLO parser over golden fixtures (no compile)
+# ---------------------------------------------------------------------------
+
+class TestHloParser:
+
+    def test_type_bytes(self):
+        assert type_bytes("f32[2,3]{1,0}") == 24
+        assert type_bytes("bf16[8,128]") == 2048
+        assert type_bytes("f32[]") == 4
+        assert type_bytes("pred[7]") == 7
+        # tuple types sum all leaves
+        assert type_bytes("(f32[4]{0}, f32[8]{0})") == 48
+        assert type_bytes("(f32[2,2], s8[3])") == 19
+
+    def test_inline_operands_fixture(self):
+        mod = parse_hlo(fixture("inline_operands.txt"))
+        counts = collective_counts(mod)
+        assert counts == {"all-gather": 1, "all-reduce": 1,
+                          "reduce-scatter": 2, "all-to-all": 0,
+                          "collective-permute": 0}
+        summary = collective_summary(mod)
+        assert [b for _, b in summary["all-gather"]] == [4 * 721536]
+        assert sorted(b for _, b in summary["reduce-scatter"]) == \
+            [4 * 2 * 128, 4 * 2 * 721408]
+        assert [b for _, b in summary["all-reduce"]] == [4]
+        # non-collective instructions are parsed too
+        assert mod.find("fusion")[0].name == "fusion.7"
+
+    def test_bare_operands_resolved_via_defs(self):
+        # the second printer style: operands are bare %names whose types
+        # come from the defining instruction, even when defined later
+        mod = parse_hlo(fixture("bare_operands.txt"))
+        summary = collective_summary(mod)
+        assert [b for _, b in summary["all-gather"]] == [4 * 16]
+        assert [b for _, b in summary["reduce-scatter"]] == [4 * 4 * 8]
+        assert [b for _, b in summary["all-reduce"]] == [4]
+
+    def test_async_pairs_count_once(self):
+        # -start carries the operand and counts; -done consumes the
+        # start's tuple and must not double-count
+        mod = parse_hlo(fixture("async_pairs.txt"))
+        counts = collective_counts(mod)
+        assert counts["all-gather"] == 1
+        assert counts["reduce-scatter"] == 1
+        assert counts["all-reduce"] == 1
+        summary = collective_summary(mod)
+        assert [b for _, b in summary["all-gather"]] == [4 * 64]
+        assert [b for _, b in summary["reduce-scatter"]] == [4 * 4 * 32]
+        assert [b for _, b in summary["all-reduce"]] == [4 * 2 * 2]
+        done = [i for i in mod.instructions if i.is_async_done]
+        assert len(done) == 3 and not any(i.is_collective for i in done)
+
+    def test_collective_bytes_contract(self):
+        # launch.hlo_analysis.collective_bytes keeps its dict contract on
+        # top of the structured walker
+        from repro.launch.hlo_analysis import collective_bytes
+        out = collective_bytes(fixture("async_pairs.txt"))
+        assert out["all-gather"] == 4 * 64
+        assert out["reduce-scatter"] == 4 * 4 * 32
+        assert out["all-reduce"] == 16
+        assert out["all-to-all"] == 0
+        assert out["_counts"]["all-gather"] == 1
+        assert out["_counts"]["reduce-scatter"] == 1
+
+
+# ---------------------------------------------------------------------------
+# schedule conformance over synthesized HLO (single process, no compile)
+# ---------------------------------------------------------------------------
+
+def fake_specs(num_layers, axis_size=2, base=256):
+    """FlatSpec stand-ins: ``total`` deliberately not axis-aligned so
+    ``padded`` differs, exercising the padded-vs-total distinction."""
+    specs = []
+    for l in range(num_layers):
+        total = base * (l + 1) + 3
+        padded = -(-total // axis_size) * axis_size
+        specs.append(SimpleNamespace(total=total, padded=padded,
+                                     axis_size=axis_size))
+    return specs
+
+
+def synth_hlo(specs, plan, *, zero3=False, extra_lines=()):
+    """Emit module text with exactly the collectives the plan
+    prescribes, using the empirically pinned operand shapes."""
+    axis = specs[0].axis_size
+    lines = ["HloModule synth", "", "ENTRY %main.1 (p: f32[1,1]) {"]
+    n = 0
+
+    def gather(bucket):
+        nonlocal n
+        n += 1
+        shard = sum(specs[l].padded // axis for l in bucket)
+        lines.append(
+            f"  %all-gather.{n} = f32[{axis},{shard}] "
+            f"all-gather(f32[1,{shard}] %concat.{n}), "
+            f"replica_groups={{{{0,1}}}}, dimensions={{0}}")
+
+    for bucket in plan.forward:
+        gather(bucket)
+    if zero3:
+        num_layers = len(specs)
+        for bucket in plan.backward:
+            if any(0 < l < num_layers - 1 for l in bucket):
+                gather(bucket)
+    for bucket in plan.backward:
+        n += 1
+        shard = sum(specs[l].padded for l in bucket) // axis
+        lines.append(
+            f"  %reduce-scatter.{n} = f32[1,{shard}] "
+            f"reduce-scatter(f32[{axis},{shard}] %grad.{n}), "
+            f"replica_groups={{{{0,1}}}}, dimensions={{0}}, "
+            f"to_apply=%sum")
+    lines.append("  %all-reduce.loss = f32[] all-reduce(f32[] %l), "
+                 "to_apply=%sum")
+    lines.extend(extra_lines)
+    lines.append("  ROOT %tuple.99 = f32[1,1] copy(f32[1,1] %p)")
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def plan_for(strat, num_layers=8):
+    costs = random_costs(num_layers, seed=0, dt=1e-3)
+    f, b = schedule(costs, strat)
+    return plan_from_decision(f, b, num_layers)
+
+
+class TestConformance:
+
+    @pytest.mark.parametrize("strat", STRATEGIES)
+    @pytest.mark.parametrize("zero3", [False, True],
+                             ids=["zero", "zero3"])
+    def test_all_strategies_conform(self, strat, zero3):
+        plan = plan_for(strat)
+        specs = fake_specs(8)
+        hlo = synth_hlo(specs, plan, zero3=zero3)
+        assert verify_schedule(hlo, plan, specs, zero3=zero3) == []
+
+    @pytest.mark.parametrize("strat", STRATEGIES)
+    @pytest.mark.parametrize("scheme", ["int8", "topk"])
+    def test_ps_wire_model_exact(self, strat, scheme):
+        # the repo's own Compressor accounting must match the
+        # independent byte formulas exactly, per backward segment
+        from repro.compress.compressor import make_compressor
+        kwargs = {"topk_fraction": 0.01} if scheme == "topk" else {}
+        comp = make_compressor(scheme, **kwargs)
+        plan = plan_for(strat)
+        specs = fake_specs(8)
+        assert verify_wire_model(specs, plan, comp) == []
+        hlo = synth_hlo(specs, plan)
+        assert verify_schedule(hlo, plan, specs, compressor=comp) == []
+
+    def test_corrupted_plan_flagged(self):
+        plan = plan_for("dynacomm")
+        specs = fake_specs(8)
+        hlo = synth_hlo(specs, plan)
+        # merge the first two forward buckets: fewer gathers prescribed
+        # than compiled, and the byte multiset shifts
+        corrupted = BucketPlan(
+            forward=(plan.forward[0] + plan.forward[1],)
+            + plan.forward[2:],
+            backward=plan.backward)
+        findings = verify_schedule(hlo, corrupted, specs)
+        assert findings
+        assert {f.code for f in findings} <= {
+            "SCHED-AG-COUNT", "SCHED-AG-BYTES"}
+
+    def test_tampered_bytes_flagged(self):
+        plan = plan_for("sequential")
+        specs = fake_specs(8)
+        hlo = synth_hlo(specs, plan)
+        first_rs = next(line for line in hlo.splitlines()
+                        if "reduce-scatter" in line)
+        shard = int(re.search(r"f32\[2,(\d+)\]", first_rs).group(1))
+        tampered = hlo.replace(
+            first_rs, first_rs.replace(f"[2,{shard}]", f"[2,{shard + 7}]"))
+        assert tampered != hlo
+        codes = {f.code for f in verify_schedule(tampered, plan, specs)}
+        assert "SCHED-RS-BYTES" in codes
+
+    def test_stray_collectives_flagged(self):
+        plan = plan_for("lbl")
+        specs = fake_specs(8)
+        hlo = synth_hlo(specs, plan, extra_lines=[
+            "  %all-to-all.50 = f32[2,64] all-to-all(f32[2,64] %x.1), "
+            "replica_groups={{0,1}}, dimensions={0}",
+            "  %all-reduce.51 = f32[1,4096] all-reduce(f32[1,4096] %g.9), "
+            "to_apply=%sum",
+        ])
+        findings = verify_schedule(hlo, plan, specs)
+        assert [f.code for f in findings] == ["SCHED-STRAY-COLLECTIVE"] * 2
+        flagged = {f.detail["opcode"] for f in findings}
+        assert flagged == {"all-to-all", "all-reduce"}
+
+    def test_single_device_only_stray_checks(self):
+        # axis_size == 1: XLA elides the plan's collectives, so counts
+        # and bytes are skipped — but big stray traffic is still flagged
+        plan = plan_for("dynacomm")
+        specs = fake_specs(8, axis_size=1)
+        assert verify_schedule("HloModule m\nENTRY %e (p: f32[1]) {\n"
+                               "  ROOT %p = f32[1] parameter(0)\n}",
+                               plan, specs) == []
+        big = ("HloModule m\nENTRY %e (p: f32[1]) {\n"
+               "  %all-reduce.1 = f32[4096] all-reduce(f32[4096] %g), "
+               "to_apply=%sum\n"
+               "  ROOT %p = f32[1] parameter(0)\n}")
+        codes = {f.code for f in verify_schedule(big, plan, specs)}
+        assert codes == {"SCHED-STRAY-COLLECTIVE"}
+
+    def test_verify_no_collectives(self):
+        clean = ("HloModule m\nENTRY %e (p: f32[8]) {\n"
+                 "  %all-reduce.1 = f32[] all-reduce(f32[] %l), "
+                 "to_apply=%sum\n"
+                 "  ROOT %p = f32[8] parameter(0)\n}")
+        assert verify_no_collectives(clean) == []
+        findings = verify_no_collectives(fixture("inline_operands.txt"))
+        assert findings
+        assert all(f.code == "SCHED-STRAY-COLLECTIVE" for f in findings)
+
+    def test_expected_byte_math(self):
+        plan = plan_for("ibatch", num_layers=6)
+        specs = fake_specs(6, axis_size=2)
+        ag = expected_ag_bytes(specs, plan)
+        assert len(ag) == len(plan.forward)
+        assert ag[0] == 4 * sum(specs[l].padded // 2
+                                for l in plan.forward[0])
+        rs = expected_rs_bytes(specs, plan)
+        assert len(rs) == len(plan.backward)
+        assert rs[-1] == 4 * sum(specs[l].padded
+                                 for l in plan.backward[-1])
+        extra = expected_ag_bytes(specs, plan, zero3=True)
+        mid = sum(1 for b in plan.backward if any(0 < l < 5 for l in b))
+        assert len(extra) == len(plan.forward) + mid
+
+
+class TestWireModel:
+
+    def test_int8_tile_pinned_to_kernel(self):
+        # conformance re-derives the int8 layout independently; this pin
+        # is the one place the two constants are allowed to meet
+        from repro.kernels.compress.ops import TILE
+        assert INT8_TILE == TILE
+
+    def test_independent_formulas(self):
+        assert independent_wire_bytes(None, 4096.0) == 4096.0
+        int8 = SimpleNamespace(scheme="int8")
+        n = 4096 / 4
+        assert independent_wire_bytes(int8, 4096.0) == n + 4.0 * 2
+        topk = SimpleNamespace(scheme="topk", fraction=0.01)
+        assert independent_wire_bytes(topk, 4096.0) == 8.0 * 11
+        # floor: at least one (index, value) pair
+        assert independent_wire_bytes(topk, 4.0) == 8.0
+
+    def test_lying_compressor_flagged(self):
+        class Lying:
+            scheme = "int8"
+            segment_overhead_bytes = 0.0
+
+            def wire_bytes(self, logical_bytes):
+                return logical_bytes   # claims no compression happened
+
+        plan = plan_for("dynacomm")
+        specs = fake_specs(8)
+        findings = verify_wire_model(specs, plan, Lying())
+        assert findings
+        assert all(f.code == "SCHED-WIRE-BYTES" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# cache + ledger audits (fake doubles, mutation-style)
+# ---------------------------------------------------------------------------
+
+class FakeCache:
+
+    def __init__(self, plans, traces=None, counts=None):
+        self.plans = list(plans)
+        self.traces = len(self.plans) if traces is None else traces
+        self._counts = counts or {}
+
+    def hlo_counts(self, plan):
+        if plan in self._counts:
+            return self._counts[plan]
+        return (len(plan.forward), len(plan.backward))
+
+
+class TestCacheAudit:
+
+    def test_clean_cache(self):
+        plans = [plan_for(s) for s in ("sequential", "dynacomm")]
+        assert verify_cache(FakeCache(plans)) == []
+
+    def test_retrace_flagged(self):
+        plans = [plan_for("sequential")]
+        findings = verify_cache(FakeCache(plans, traces=3))
+        assert [f.code for f in findings] == ["SCHED-CACHE-RETRACE"]
+
+    def test_count_mismatch_flagged(self):
+        plan = plan_for("lbl")
+        cache = FakeCache([plan], counts={plan: (0, 0)})
+        findings = verify_cache(cache)
+        assert [f.code for f in findings] == ["SCHED-CACHE-COUNTS"]
+
+    def test_single_device_accepts_elided_or_degenerate(self):
+        # one device: XLA may elide the collectives or compile them as
+        # degenerate ops — both pass, anything else is flagged
+        plan = plan_for("lbl")
+        specs = fake_specs(8, axis_size=1)
+        assert verify_cache(FakeCache([plan], counts={plan: (0, 0)}),
+                            specs=specs) == []
+        assert verify_cache(FakeCache([plan]), specs=specs) == []
+        partial = FakeCache([plan], counts={plan: (1, 0)})
+        findings = verify_cache(partial, specs=specs)
+        assert [f.code for f in findings] == ["SCHED-CACHE-COUNTS"]
+
+
+class TestPushLedgerAudit:
+
+    def _setup(self, scheme="int8"):
+        from repro.compress.compressor import make_compressor
+        kwargs = {"topk_fraction": 0.01} if scheme == "topk" else {}
+        comp = make_compressor(scheme, **kwargs) if scheme != "none" \
+            else None
+        plans = {0: plan_for("dynacomm"), 1: plan_for("sequential")}
+        specs = fake_specs(8)
+        return comp, plans, specs
+
+    def _ledger_for(self, plans, specs, comp, segments_by_worker):
+        pushed, wire, n_push = {}, {}, 0
+        for w, nseg in segments_by_worker.items():
+            bwd = plans[w].backward
+            pushed[w] = sum(
+                sum(specs[l].total * 4 for l in bwd[i % len(bwd)])
+                for i in range(nseg))
+            wire[w] = sum(
+                segment_wire_bytes(specs, bwd[i % len(bwd)], comp)
+                for i in range(nseg))
+            n_push += nseg
+        return SimpleNamespace(pushed_bytes=pushed,
+                               pushed_wire_bytes=wire,
+                               num_pushes=n_push)
+
+    @pytest.mark.parametrize("scheme", ["none", "int8", "topk"])
+    def test_clean_ledger(self, scheme):
+        comp, plans, specs = self._setup(scheme)
+        # worker 0: two full iterations + a partial; worker 1: one full
+        nseg = {0: 2 * len(plans[0].backward) + 1,
+                1: len(plans[1].backward)}
+        ledger = self._ledger_for(plans, specs, comp, nseg)
+        assert verify_push_ledger(ledger, plans, specs, comp) == []
+
+    def test_undecomposable_bytes_flagged(self):
+        comp, plans, specs = self._setup()
+        ledger = self._ledger_for(plans, specs, comp,
+                                  {0: len(plans[0].backward)})
+        ledger.pushed_bytes[0] += 1
+        findings = verify_push_ledger(ledger, plans, specs, comp)
+        # the broken decomposition also desyncs the message count
+        assert findings
+        assert all(f.code == "SCHED-LEDGER" for f in findings)
+        assert any("decompose" in f.message for f in findings)
+
+    def test_wire_mismatch_flagged(self):
+        comp, plans, specs = self._setup()
+        ledger = self._ledger_for(plans, specs, comp,
+                                  {0: len(plans[0].backward)})
+        ledger.pushed_wire_bytes[0] -= 1
+        findings = verify_push_ledger(ledger, plans, specs, comp)
+        assert any("wire bytes" in f.message for f in findings)
+        assert all(f.code == "SCHED-LEDGER" for f in findings)
+
+    def test_message_count_mismatch_flagged(self):
+        comp, plans, specs = self._setup()
+        ledger = self._ledger_for(plans, specs, comp, {0: 3, 1: 2})
+        ledger.num_pushes += 1
+        findings = verify_push_ledger(ledger, plans, specs, comp)
+        assert any("push messages" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# AST lints: each seeded hazard fires; suppression works; src/ is clean
+# ---------------------------------------------------------------------------
+
+def codes(source, path="src/repro/some/module.py", config=None):
+    return [f.code for f in lint_source(source, path, config)]
+
+
+class TestLints:
+
+    def test_global_random_draw(self):
+        assert codes("import random\nrandom.random()\n") == ["DET-RANDOM"]
+        assert codes("import random\nrandom.shuffle(xs)\n") == \
+            ["DET-RANDOM"]
+
+    def test_numpy_global_random(self):
+        assert codes("import numpy as np\nnp.random.rand(3)\n") == \
+            ["DET-RANDOM"]
+        assert codes("import numpy.random as npr\nnpr.standard_normal()\n"
+                     ) == ["DET-RANDOM"]
+
+    def test_seeded_constructions_are_safe(self):
+        assert codes("import numpy as np\n"
+                     "rng = np.random.default_rng(0)\nrng.random()\n") == []
+        assert codes("import random\nr = random.Random(0)\n") == []
+
+    def test_unseeded_ctor(self):
+        assert codes("import random\nr = random.Random()\n") == \
+            ["DET-RANDOM"]
+        assert codes("import numpy as np\n"
+                     "rng = np.random.default_rng()\n") == ["DET-RANDOM"]
+
+    def test_from_import_draw(self):
+        assert codes("from random import random\n") == ["DET-RANDOM"]
+        assert codes("from numpy.random import rand\n") == ["DET-RANDOM"]
+        assert codes("from random import Random\n") == []
+
+    def test_wall_clock_scoped_to_deterministic_modules(self):
+        src = "import time\nt = time.time()\n"
+        assert codes(src, path="src/repro/ps/async_mode.py") == \
+            ["DET-WALL-CLOCK"]
+        assert codes(src, path="src/repro/core/simulator.py") == \
+            ["DET-WALL-CLOCK"]
+        # wall clock is fine in profiling / launch code
+        assert codes(src, path="src/repro/launch/bench.py") == []
+
+    def test_wall_clock_datetime_and_from_import(self):
+        assert codes("from datetime import datetime\n"
+                     "t = datetime.now()\n",
+                     path="src/repro/core/simulator.py") == \
+            ["DET-WALL-CLOCK"]
+        assert codes("from time import monotonic\n",
+                     path="src/repro/ps/server.py") == ["DET-WALL-CLOCK"]
+
+    def test_dict_order_walks(self):
+        assert codes("for k, v in params.items():\n    pass\n") == \
+            ["DET-DICT-ORDER"]
+        assert codes("xs = [k for k in grad_tree.keys()]\n") == \
+            ["DET-DICT-ORDER"]
+        # sorted() canonicalizes the walk
+        assert codes("for k in sorted(params.keys()):\n    pass\n") == []
+        # non-param-tree dicts are out of scope
+        assert codes("for k, v in cache.items():\n    pass\n") == []
+
+    def test_kernel_interpret(self):
+        call = "pl.pallas_call(kern, interpret=True)\n"
+        assert codes(call, path="src/repro/kernels/foo/foo.py") == \
+            ["KERNEL-INTERPRET"]
+        assert codes(call, path="src/repro/dist/zero.py") == []
+        default = "def op(x, interpret: bool = False):\n    return x\n"
+        assert codes(default, path="src/repro/kernels/foo/ops.py") == \
+            ["KERNEL-INTERPRET"]
+        ok = "def op(x, interpret=None):\n    return x\n"
+        assert codes(ok, path="src/repro/kernels/foo/ops.py") == []
+
+    def test_deprecated_alias_imports(self):
+        assert codes("from repro.dist.dynamic import PlanStepCache\n") == \
+            ["DEPRECATED-IMPORT"]
+        assert codes("from repro.ps.dynamic import sequential_plan\n") == \
+            ["DEPRECATED-IMPORT"]
+        # the classes that still live there are fine
+        assert codes("from repro.dist.dynamic import DynamicTrainer\n") == []
+        assert codes(
+            "from repro.runtime.replan import PlanStepCache\n") == []
+
+    def test_noqa_suppression(self):
+        assert codes("import random\nrandom.random()  # noqa\n") == []
+        assert codes("import random\n"
+                     "random.random()  # noqa: DET-RANDOM\n") == []
+        # an unrelated code does not suppress
+        assert codes("import random\n"
+                     "random.random()  # noqa: DET-DICT-ORDER\n") == \
+            ["DET-RANDOM"]
+
+    def test_parse_error_reported(self):
+        assert codes("def broken(:\n") == ["PARSE-ERROR"]
+
+    def test_src_tree_is_clean(self):
+        # the CI gate: the repo's own sources produce zero findings
+        findings = lint_paths([str(SRC)])
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_custom_config_scoping(self):
+        cfg = LintConfig(deterministic_modules=("sim/loop.py",),
+                         kernel_dirs=("fastpath",))
+        assert codes("import time\ntime.time()\n",
+                     path="pkg/sim/loop.py", config=cfg) == \
+            ["DET-WALL-CLOCK"]
+        assert codes("f(interpret=False)\n",
+                     path="pkg/fastpath/k.py", config=cfg) == \
+            ["KERNEL-INTERPRET"]
+
+
+# ---------------------------------------------------------------------------
+# findings serialization
+# ---------------------------------------------------------------------------
+
+class TestFindings:
+
+    def test_json_roundtrip(self):
+        fs = [Finding(code="SCHED-AG-COUNT", message="m",
+                      detail={"expected": 3, "observed": 2}),
+              Finding(code="DET-RANDOM", message="n", severity="warning",
+                      path="a.py", line=7)]
+        doc = json.loads(findings_to_json(fs, command="lint"))
+        assert doc["num_findings"] == 2
+        assert doc["num_errors"] == 1
+        assert doc["command"] == "lint"
+        assert doc["findings"][0]["detail"] == {"expected": 3,
+                                                "observed": 2}
+        assert doc["findings"][1]["path"] == "a.py"
+
+    def test_format_includes_location(self):
+        f = Finding(code="DET-RANDOM", message="msg", path="a.py", line=3)
+        assert f.format() == "a.py:3: error[DET-RANDOM] msg"
+
+
+# ---------------------------------------------------------------------------
+# in-process runtime verification (1 device; the subprocess CLI sweep
+# below covers the forged-2-device paths)
+# ---------------------------------------------------------------------------
+
+class TestVerifyRuntimeInProcess:
+
+    def _verify(self, name, **kwargs):
+        from repro.analysis.runtime_verify import verify_runtime
+        from repro.runtime.config import RuntimeConfig
+        config = RuntimeConfig.load(str(CONFIGS / name))
+        findings, info = verify_runtime(config, **kwargs)
+        assert findings == [], "\n".join(f.format() for f in findings)
+        return info
+
+    def test_local(self):
+        info = self._verify("local.json")
+        assert info["checked"] == ["no-collectives"]
+
+    def test_static_ps(self):
+        info = self._verify("ps.json")
+        assert "ledger" in info["checked"]
+        assert info["steps_run"] == 1
+
+    def test_dynamic_cache(self):
+        info = self._verify("dynamic.json")
+        assert info["plans_seen"] >= 1
+        assert info["traces"] == info["plans_seen"]
+
+    def test_async_int8_exact_wire(self):
+        info = self._verify("ps_async_int8.json")
+        assert info["compression"] == "int8"
+        assert "push-ledger" in info["checked"]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def run_cli(*args, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.update(env_extra or {})
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=str(REPO))
+
+
+class TestCli:
+
+    def test_main_in_process(self, tmp_path, capsys):
+        # the entry point itself, without a subprocess: lint a hazard,
+        # then verify the cheapest config with --devices 0 (leave the
+        # already-initialized jax alone)
+        from repro.analysis.cli import main
+        bad = tmp_path / "bad.py"
+        bad.write_text("import random\nrandom.random()\n")
+        out_json = tmp_path / "lint.json"
+        assert main(["lint", str(bad), "--json", str(out_json)]) == 1
+        assert json.loads(out_json.read_text())["num_errors"] == 1
+        assert "DET-RANDOM" in capsys.readouterr().out
+        assert main(["verify", "--config", str(CONFIGS / "local.json"),
+                     "--devices", "0"]) == 0
+        assert "no findings" in capsys.readouterr().out
+
+    def test_lint_clean_tree_exits_zero(self, tmp_path):
+        out_json = tmp_path / "findings.json"
+        res = run_cli("lint", str(SRC), "--json", str(out_json))
+        assert res.returncode == 0, res.stdout + res.stderr
+        assert "no findings" in res.stdout
+        doc = json.loads(out_json.read_text())
+        assert doc["num_findings"] == 0
+        assert doc["command"] == "lint"
+
+    def test_lint_hazard_exits_nonzero(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("import random\nrandom.random()\n")
+        out_json = tmp_path / "findings.json"
+        res = run_cli("lint", str(bad), "--json", str(out_json))
+        assert res.returncode == 1
+        assert "DET-RANDOM" in res.stdout
+        doc = json.loads(out_json.read_text())
+        assert doc["num_errors"] == 1
+        assert doc["findings"][0]["code"] == "DET-RANDOM"
+
+    def test_verify_local_config(self, tmp_path):
+        # the cheapest config: single-jit local step, no collectives
+        out_json = tmp_path / "verify.json"
+        res = run_cli("verify", "--config",
+                      str(CONFIGS / "local.json"), "--json", str(out_json))
+        assert res.returncode == 0, res.stdout + res.stderr
+        doc = json.loads(out_json.read_text())
+        assert doc["num_findings"] == 0
+        assert doc["command"] == "verify"
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("config", sorted(
+        p.name for p in CONFIGS.glob("*.json")))
+    def test_verify_all_smoke_configs(self, config, tmp_path):
+        out_json = tmp_path / "verify.json"
+        res = run_cli("verify", "--config", str(CONFIGS / config),
+                      "--json", str(out_json))
+        assert res.returncode == 0, res.stdout + res.stderr
+        assert json.loads(out_json.read_text())["num_findings"] == 0

@@ -372,13 +372,13 @@ class TestDynamicTrainerSingleDevice:
             DynamicTrainer(steps_per_epoch=5, cost_source="psychic", **kw)
 
     def test_sequential_plan_shape(self):
-        from repro.dist.dynamic import sequential_plan
+        from repro.runtime.replan import sequential_plan
         p = sequential_plan(4)
         assert p.forward == ((0, 1, 2, 3),)
         assert p.backward == ((3, 2, 1, 0),)
 
     def test_hlo_collective_counts(self):
-        from repro.dist.dynamic import hlo_collective_counts
+        from repro.runtime.replan import hlo_collective_counts
         hlo = (
             "  %a = f32[4,16]{1,0} all-gather(f32[1,16]{1,0} %x), "
             "dimensions={0}\n"
