@@ -1,0 +1,113 @@
+"""Elastic-fleet churn benchmark (``repro.fleet``).
+
+One bench, ``fleet_churn``: makespan and loss trajectory of the
+deterministic event-queue engine as membership churn grows, at fleet
+sizes W ∈ {8, 64, 512}.  Per fleet size the bench first runs a
+churn-free baseline to measure the simulated makespan, then synthesizes
+reproducible churn schedules (joins/leaves/failures at increasing event
+rates) over that horizon and re-runs the same push budget — so the
+``churn_per_s`` column is meaningful relative to the run's own
+timescale, not an arbitrary wall-clock guess.
+
+Each row carries the run's simulated makespan, the loss trajectory
+(quartile samples of the accepted-push losses), the SSP staleness
+watermark (must stay ≤ k under churn — the bound the engine enforces),
+the re-plan count (one per membership event plus any measured-drift
+triggers), and the server re-sharding traffic when ``workers_per_shard``
+lets the shard count track the fleet.
+
+The model is a deliberately tiny quadratic (4 layers, 64 weights each):
+the object under test is the event engine, membership machinery, and
+re-planning pipeline, not the gradient computation.  CI publishes this
+bench as ``BENCH_fleet.json``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+FLEET_SIZES = (8, 64, 512)
+#: target numbers of membership events per run, scaled into a churn rate
+#: against the measured churn-free makespan
+EVENT_TARGETS = (0, 4, 16)
+LAYERS, WIDTH = 4, 64
+
+
+def _toy_layers(seed: int = 0) -> List[Dict[str, jnp.ndarray]]:
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.standard_normal(WIDTH), jnp.float32)}
+            for _ in range(LAYERS)]
+
+
+def _toy_loss(layer_list, batch):
+    err = sum(jnp.sum((layer["w"] - batch["target"]) ** 2)
+              for layer in layer_list)
+    return err / len(layer_list)
+
+
+def _batch_fn(worker: int, idx: int):
+    del worker, idx
+    return {"target": jnp.zeros((WIDTH,), jnp.float32)}
+
+
+def _run(workers: int, pushes: int, schedule: Optional[object],
+         workers_per_shard: int) -> Dict:
+    from repro.fleet import FleetTrainer
+    from repro.optim import sgd
+    tr = FleetTrainer(
+        init_layers=_toy_layers(), loss_fn=_toy_loss,
+        optimizer=sgd(1e-2, 0.0), workers=workers, schedule=schedule,
+        num_servers=2, workers_per_shard=workers_per_shard,
+        staleness=max(2, workers // 64), throttle="wait")
+    log = tr.run(pushes, _batch_fn)
+    losses = [e.loss for e in log.accepted]
+    q = [losses[max(0, int(len(losses) * f) - 1)]
+         for f in (0.25, 0.5, 0.75, 1.0)]
+    kinds = [e.kind for e in tr.membership_events]
+    return {
+        "makespan_s": round(log.makespan, 4),
+        "final_loss": round(losses[-1], 5),
+        "loss_q25": round(q[0], 5), "loss_q50": round(q[1], 5),
+        "loss_q75": round(q[2], 5),
+        "accepted": len(log.accepted),
+        "rejected": log.num_rejected,
+        "max_staleness": log.max_staleness,
+        "staleness_bound": tr.staleness,
+        "joins": kinds.count("join"),
+        "leaves": kinds.count("leave"),
+        "fails": kinds.count("crash") + kinds.count("stall") +
+        kinds.count("stall-evict"),
+        "replans": len(tr.replan_events),
+        "reshards": sum(1 for e in tr.replan_events if e.resharded),
+        "migrated_bytes": sum(e.migrated_bytes for e in tr.replan_events),
+        "final_workers": tr.membership.num_active,
+    }
+
+
+def fleet_churn() -> List[Dict]:
+    """Makespan + loss trajectory vs. churn rate at W ∈ {8, 64, 512}."""
+    from repro.fleet import FleetSchedule
+    rows = []
+    for W in FLEET_SIZES:
+        pushes = max(64, 2 * W)
+        shard_track = max(0, W // 16)       # shard count follows the fleet
+        baseline = _run(W, pushes, None, shard_track)
+        horizon = 0.8 * baseline["makespan_s"]
+        for target in EVENT_TARGETS:
+            if target == 0:
+                row = dict(baseline)
+                rate = 0.0
+            else:
+                rate = target / horizon
+                schedule = FleetSchedule.synthesize(
+                    range(W), churn=rate, horizon=horizon, seed=W + target)
+                row = _run(W, pushes, schedule, shard_track)
+            rows.append({"workers": W, "pushes": pushes,
+                         "churn_per_s": round(rate, 4), **row})
+    return rows
+
+
+FLEET_BENCHES = {"fleet_churn": fleet_churn}

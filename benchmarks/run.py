@@ -33,11 +33,13 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks.compression import COMPRESSION_BENCHES
+    from benchmarks.fleet_churn import FLEET_BENCHES
     from benchmarks.paper_figures import ALL_BENCHES
     from benchmarks.ps_scenarios import PS_BENCHES
     benches = dict(ALL_BENCHES)
     benches.update(PS_BENCHES)
     benches.update(COMPRESSION_BENCHES)
+    benches.update(FLEET_BENCHES)
 
     if not args.skip_roofline:
         from benchmarks.roofline_report import roofline_rows

@@ -25,6 +25,7 @@ from repro.analysis.conformance import (expected_ag_bytes,
                                         expected_rs_bytes,
                                         independent_wire_bytes,
                                         segment_wire_bytes, verify_cache,
+                                        verify_fleet_membership,
                                         verify_no_collectives,
                                         verify_push_ledger,
                                         verify_schedule, verify_wire_model)
@@ -42,6 +43,6 @@ __all__ = [
     "expected_ag_bytes", "expected_rs_bytes", "findings_to_json",
     "independent_wire_bytes", "lint_file", "lint_paths", "lint_source",
     "parse_hlo", "render_findings", "segment_wire_bytes", "type_bytes",
-    "verify_cache", "verify_no_collectives", "verify_push_ledger",
-    "verify_schedule", "verify_wire_model",
+    "verify_cache", "verify_fleet_membership", "verify_no_collectives",
+    "verify_push_ledger", "verify_schedule", "verify_wire_model",
 ]

@@ -43,6 +43,7 @@ __all__ = [
     "expected_ag_bytes", "expected_rs_bytes", "independent_wire_bytes",
     "segment_wire_bytes", "verify_schedule", "verify_no_collectives",
     "verify_cache", "verify_wire_model", "verify_push_ledger",
+    "verify_fleet_membership",
 ]
 
 # Int8 wire layout: 1 byte/element + one fp32 scale per quantization
@@ -314,12 +315,53 @@ def verify_push_ledger(ledger: Any, plans_by_worker: Dict[int, Any],
     decomposition under the independent byte model must equal the
     recorded ``pushed_wire_bytes`` to the integer — proving the
     compressed accounting exact for every committed push, including
-    int8/top-k payloads."""
+    int8/top-k payloads.
+
+    Elastic fleets re-plan workers mid-run, so a worker's bytes no
+    longer decompose under ONE plan.  For those, ``plans_by_worker``
+    maps the worker to its *push history* instead — a sequence of
+    ``(plan, full_iterations, extra_segments)`` entries (the
+    ``FleetTrainer.push_history`` format, ``extra_segments`` counting a
+    trailing partial walk, e.g. a crash mid-push) — and the audit sums
+    the exact decomposition those entries pin down.  A departed worker's
+    ledger entry closes cleanly iff its history reproduces the recorded
+    bytes; a joined worker simply has no entries before its join."""
     findings: List[Finding] = []
     ctx = {"context": context} if context else {}
     total_segments = 0
     for worker, logical_target in sorted(ledger.pushed_bytes.items()):
         plan = plans_by_worker[worker]
+        if not hasattr(plan, "backward"):     # elastic: push history
+            logical = wire = nseg = 0
+            for entry_plan, full, extra in plan:
+                seg_logical = [sum(specs[l].total * 4 for l in b)
+                               for b in entry_plan.backward]
+                seg_wire = [segment_wire_bytes(specs, b, compressor)
+                            for b in entry_plan.backward]
+                logical += full * sum(seg_logical) + sum(seg_logical[:extra])
+                wire += full * sum(seg_wire) + sum(seg_wire[:extra])
+                nseg += full * len(seg_logical) + extra
+            if logical != logical_target:
+                findings.append(Finding(
+                    code="SCHED-LEDGER",
+                    message=f"worker {worker}: recorded {logical_target} "
+                            f"pushed bytes, but its push history "
+                            f"decomposes to {logical}",
+                    detail={"worker": worker, "recorded": logical_target,
+                            "history_bytes": logical, **ctx}))
+                continue
+            recorded_wire = ledger.pushed_wire_bytes.get(worker, 0)
+            if wire != recorded_wire:
+                findings.append(Finding(
+                    code="SCHED-LEDGER",
+                    message=f"worker {worker}: ledger records "
+                            f"{recorded_wire} pushed wire bytes, the "
+                            f"independent byte model implies {wire} for "
+                            f"its push history ({nseg} segments)",
+                    detail={"worker": worker, "recorded": recorded_wire,
+                            "expected": wire, "segments": nseg, **ctx}))
+            total_segments += nseg
+            continue
         seg_logical = [sum(specs[l].total * 4 for l in b)
                        for b in plan.backward]
         seg_wire = [segment_wire_bytes(specs, b, compressor)
@@ -359,4 +401,68 @@ def verify_push_ledger(ledger: Any, plans_by_worker: Dict[int, Any],
                     f"{total_segments} segments",
             detail={"num_pushes": ledger.num_pushes,
                     "segments": total_segments, **ctx}))
+    return findings
+
+
+def verify_fleet_membership(log: Any, joined_at: Dict[int, Tuple[float, int]],
+                            departed: Dict[int, Tuple[float, str]], *,
+                            staleness_bound: int,
+                            context: str = "") -> List[Finding]:
+    """Membership-coherence audit of an elastic-fleet run log.
+
+    Against an ``AsyncRunLog`` and the roster history a
+    ``FleetMembership`` records, checks that
+
+    * every accepted push is within the staleness bound ``k`` — churn
+      must not let a stale gradient slip past the SSP gate;
+    * no worker commits outside its membership window: nothing before
+      its join time, nothing after its departure (a departed worker's
+      ledger closes cleanly);
+    * a joined worker's pushes start at (or after) the server version it
+      joined at — it can never have pulled older parameters than the
+      join-time head.
+    """
+    findings: List[Finding] = []
+    ctx = {"context": context} if context else {}
+    for e in log.accepted:
+        if e.result.staleness > staleness_bound:
+            findings.append(Finding(
+                code="FLEET-STALENESS",
+                message=f"worker {e.worker} committed at staleness "
+                        f"{e.result.staleness} > bound {staleness_bound} "
+                        f"(t={e.sim_time})",
+                detail={"worker": e.worker, "staleness": e.result.staleness,
+                        "bound": staleness_bound, "time": e.sim_time,
+                        **ctx}))
+        if e.worker not in joined_at:
+            findings.append(Finding(
+                code="FLEET-MEMBER",
+                message=f"worker {e.worker} committed at t={e.sim_time} "
+                        f"but never joined the fleet",
+                detail={"worker": e.worker, "time": e.sim_time, **ctx}))
+            continue
+        join_t, join_v = joined_at[e.worker]
+        if e.sim_time < join_t:
+            findings.append(Finding(
+                code="FLEET-MEMBER",
+                message=f"worker {e.worker} committed at t={e.sim_time}, "
+                        f"before its join at t={join_t}",
+                detail={"worker": e.worker, "time": e.sim_time,
+                        "joined": join_t, **ctx}))
+        if e.version < join_v:
+            findings.append(Finding(
+                code="FLEET-MEMBER",
+                message=f"worker {e.worker} pushed against version "
+                        f"{e.version}, older than the head at its join "
+                        f"(version {join_v})",
+                detail={"worker": e.worker, "version": e.version,
+                        "join_version": join_v, **ctx}))
+        if e.worker in departed and e.sim_time > departed[e.worker][0]:
+            dep_t, reason = departed[e.worker]
+            findings.append(Finding(
+                code="FLEET-MEMBER",
+                message=f"worker {e.worker} committed at t={e.sim_time}, "
+                        f"after its departure ({reason}) at t={dep_t}",
+                detail={"worker": e.worker, "time": e.sim_time,
+                        "departed": dep_t, "reason": reason, **ctx}))
     return findings

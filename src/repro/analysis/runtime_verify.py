@@ -27,6 +27,7 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.analysis.conformance import (segment_wire_bytes, verify_cache,
+                                        verify_fleet_membership,
                                         verify_no_collectives,
                                         verify_push_ledger, verify_schedule,
                                         verify_wire_model)
@@ -54,6 +55,8 @@ def verify_runtime(config: Any, *, steps: Optional[int] = None
         return _verify_dynamic(rt, config, steps)
     if regime in ("ps-async", "dynamic-ps-async"):
         return _verify_async(rt, config, regime, steps)
+    if regime == "fleet-async":
+        return _verify_fleet(rt, config, steps)
     raise ValueError(f"no conformance driver for runtime {regime!r}")
 
 
@@ -169,3 +172,43 @@ def _verify_async(rt: Any, config: Any, regime: str, steps: Optional[int]
         compression=getattr(compressor, "scheme", "none")
         if compressor else "none",
         checked=["no-collectives", "wire-model", "push-ledger"])
+
+
+def _verify_fleet(rt: Any, config: Any, steps: Optional[int]
+                  ) -> Tuple[List[Finding], Dict[str, Any]]:
+    tr = rt.trainer
+    # run far enough to fire the scripted membership events (the ledger
+    # and membership audits are only interesting once churn happened)
+    n = steps if steps is not None else 4
+    rt.fit(n)
+
+    batch = rt._batch_fn(0)
+    hlo = tr._grad_fn.lower(tr.layer_params(),
+                            batch).compile().as_text()
+    findings = verify_no_collectives(hlo, context="fleet-async grad")
+
+    specs = tr.specs
+    compressor = tr.compressor
+    history = tr.push_history
+    if compressor is not None:
+        distinct = dict.fromkeys(p for entries in history.values()
+                                 for p, _, _ in entries)
+        for plan in distinct:
+            findings.extend(verify_wire_model(specs, plan, compressor,
+                                              context="fleet-async plan"))
+    # the elastic form: each worker's ledger entry decomposes under its
+    # own plan *history* (departed workers' entries close cleanly)
+    findings.extend(verify_push_ledger(
+        tr.server.ledger, history, specs, compressor,
+        context="fleet-async ledger"))
+    findings.extend(verify_fleet_membership(
+        tr.log, tr.membership.joined_at, tr.membership.departed,
+        staleness_bound=tr.staleness, context="fleet-async membership"))
+    return findings, _info(
+        "fleet-async", pushes_run=n, workers=tr.membership.num_active,
+        replans=len(tr.replan_events),
+        membership_events=len(tr.membership_events),
+        compression=getattr(compressor, "scheme", "none")
+        if compressor else "none",
+        checked=["no-collectives", "wire-model", "push-ledger",
+                 "fleet-membership"])

@@ -1,0 +1,57 @@
+"""Elastic worker fleets on a deterministic event-queue engine.
+
+The PS regime's async core (``repro.ps.async_mode``) assumes a fixed
+worker set; this package is the fleet-scale layer above it:
+
+* :mod:`repro.fleet.engine` — ``EventQueue``, the heap-based
+  discrete-event core with stable ``(time, seq, worker)`` tie-breaking
+  that the async trainer's loop now runs on, bit-reproducible at
+  hundreds-to-thousands of simulated workers;
+* :mod:`repro.fleet.membership` — ``FleetSchedule`` of join/leave/fail/
+  drift events, failure injection (crash mid-push, silent stall), and
+  the ``FleetMembership`` tracker that maps the live worker set onto a
+  ``PSTopology``;
+* :mod:`repro.fleet.drift` — ``FleetDriftDetector``, per-worker EWMA
+  drift detection over *observed* commit gaps (the fleet-scale successor
+  of ``core.profiler.EwmaDriftDetector``);
+* :mod:`repro.fleet.trainer` — ``FleetTrainer``, the elastic
+  bounded-staleness trainer: membership events re-plan through
+  ``TopologyScheduler``, the server re-shards without losing versioned
+  state, and the whole loop save/restores bit-identically.
+
+``FleetTrainer`` is exported lazily: ``trainer`` imports ``repro.ps``,
+which itself imports :mod:`repro.fleet.engine`, so the eager surface of
+this package must stay dependency-free to keep the import graph acyclic.
+"""
+
+from repro.fleet.engine import Event, EventQueue
+
+__all__ = [
+    "Event", "EventQueue",
+    "FAIL_MODES", "FLEET_EVENT_KINDS", "FleetEvent", "FleetMembership",
+    "FleetSchedule", "WorkerSpec",
+    "FleetDriftDetector",
+    "FleetReplanEvent", "FleetTrainer", "MembershipChange",
+]
+
+_LAZY = {
+    "FAIL_MODES": "repro.fleet.membership",
+    "FLEET_EVENT_KINDS": "repro.fleet.membership",
+    "FleetEvent": "repro.fleet.membership",
+    "FleetMembership": "repro.fleet.membership",
+    "FleetSchedule": "repro.fleet.membership",
+    "WorkerSpec": "repro.fleet.membership",
+    "FleetDriftDetector": "repro.fleet.drift",
+    "FleetReplanEvent": "repro.fleet.trainer",
+    "FleetTrainer": "repro.fleet.trainer",
+    "MembershipChange": "repro.fleet.trainer",
+}
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.fleet' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)

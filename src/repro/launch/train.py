@@ -28,6 +28,10 @@ their asynchronous form):
   time-varying topology (``--up-shift-gbps`` degrades every uplink at
   ``--shift-epoch``); with ``--staleness k``, per-worker re-plans swapped
   into the async event loop.
+* ``fleet-async`` — elastic membership over the deterministic event
+  engine: ``--fleet-schedule events.json`` scripts joins/leaves/failures/
+  drift (a JSON list of fleet event dicts), each membership change
+  re-plans every surviving worker and re-shards the server.
 
 Examples::
 
@@ -50,9 +54,9 @@ import argparse
 import time
 
 from repro.configs import ARCHITECTURES
-from repro.runtime import (CompressionConfig, ExecutionConfig, MeasureConfig,
-                           NetworkConfig, RuntimeConfig, ScheduleConfig,
-                           TopologyConfig, build_runtime)
+from repro.runtime import (CompressionConfig, ExecutionConfig, FleetConfig,
+                           MeasureConfig, NetworkConfig, RuntimeConfig,
+                           ScheduleConfig, TopologyConfig, build_runtime)
 
 
 def config_from_flags(args) -> RuntimeConfig:
@@ -83,8 +87,22 @@ def config_from_flags(args) -> RuntimeConfig:
             worker_flops=args.worker_flops,
             up_shift_factor=up_shift, shift_epoch=args.shift_epoch)
 
+    fleet = None
+    if args.fleet_schedule is not None and name != "fleet-async":
+        raise SystemExit("--fleet-schedule scripts elastic membership; it "
+                         "needs --runtime fleet-async")
+    if name == "fleet-async":
+        events = ()
+        if args.fleet_schedule is not None:
+            import json
+            with open(args.fleet_schedule) as fh:
+                events = tuple(json.load(fh))
+        fleet = FleetConfig(events=events,
+                            workers_per_shard=args.workers_per_shard)
+
     return RuntimeConfig(
         runtime=name, arch=args.arch, reduced=args.reduced,
+        fleet=fleet,
         batch=args.batch, seq=args.seq,
         optimizer=args.optimizer, lr=args.lr,
         schedule=ScheduleConfig(
@@ -107,7 +125,20 @@ def config_from_flags(args) -> RuntimeConfig:
 
 def _print_events(rt) -> None:
     for e in rt.events:
-        if hasattr(e, "worker_plans"):       # async per-worker re-plan
+        if hasattr(e, "resharded"):          # fleet re-plan
+            reshard = f" resharded→{e.num_servers} shards " \
+                      f"({e.migrated_bytes / 1e6:.1f} MB moved)" \
+                      if e.resharded else ""
+            print(f"t={e.sim_time:8.3f} @push {e.at_push:4d}: re-plan "
+                  f"({e.reason}, worker {e.worker}) — {e.num_workers} "
+                  f"workers, "
+                  f"{'re-segmented' if e.plan_changed else 'unchanged'}"
+                  f"{reshard}  sched {e.scheduling_seconds * 1e3:.2f} ms "
+                  f"hidden={e.overhead_hidden}")
+        elif hasattr(e, "fleet_size"):       # fleet membership change
+            print(f"t={e.sim_time:8.3f}: {e.kind} worker {e.worker} "
+                  f"(fleet size {e.fleet_size})")
+        elif hasattr(e, "worker_plans"):     # async per-worker re-plan
             segs = [(len(p.forward), len(p.backward))
                     for p in e.worker_plans]
             print(f"epoch {e.epoch:3d} @push {e.at_push:4d}: per-worker "
@@ -147,7 +178,8 @@ def main() -> None:
                     help="train the smoke-scale variant (CPU-friendly)")
     ap.add_argument("--runtime",
                     choices=("local", "zero", "dynamic", "ps", "ps-async",
-                             "dynamic-ps", "dynamic-ps-async"),
+                             "dynamic-ps", "dynamic-ps-async",
+                             "fleet-async"),
                     default="local",
                     help="registry name; --staleness k still upgrades "
                          "ps/dynamic-ps to their -async form")
@@ -189,6 +221,13 @@ def main() -> None:
     ap.add_argument("--up-shift-gbps", type=float, default=None,
                     help="dynamic-ps: degrade every uplink to this "
                          "bandwidth at --shift-epoch")
+    ap.add_argument("--fleet-schedule", default=None,
+                    help="fleet-async: JSON file holding a list of fleet "
+                         "event dicts (time/kind/worker/...) to script "
+                         "membership churn")
+    ap.add_argument("--workers-per-shard", type=int, default=0,
+                    help="fleet-async: let the shard count track the "
+                         "fleet size (0 keeps --ps-servers fixed)")
     ap.add_argument("--worker-flops", type=float, default=1e10,
                     help="edge-worker compute rate fed to the profiler")
     ap.add_argument("--compress", choices=("none", "int8", "topk"),
@@ -236,28 +275,27 @@ def main() -> None:
         spec += (f", k={config.execution.staleness or 0} "
                  f"({config.execution.throttle}"
                  f"{'+aggregate' if config.execution.aggregate else ''})")
+    if config.runtime == "fleet-async" and config.fleet is not None:
+        spec += f", fleet events {len(config.fleet.events)}" \
+            if config.fleet.events else \
+            f", fleet churn {config.fleet.churn}/s"
     print(spec)
 
     t0 = time.perf_counter()
     losses = []
-    saved_at = logged_at = 0
-    # chunk by the finest active cadence so logging and periodic
-    # checkpointing each fire on their own schedule
-    cadences = [c for c in (
-        args.log_every,
-        args.checkpoint_every if args.checkpoint else 0) if c]
-    stride = min(cadences) if cadences else args.steps
+    # periodic checkpointing now rides inside fit(); the outer loop only
+    # chunks by the logging cadence for the wall-clock progress line
     while len(losses) < args.steps:
-        losses.extend(rt.fit(min(stride, args.steps - len(losses))))
-        if args.log_every and len(losses) - logged_at >= args.log_every:
+        chunk = min(args.log_every or args.steps, args.steps - len(losses))
+        losses.extend(rt.fit(
+            chunk,
+            checkpoint_every=(args.checkpoint_every if args.checkpoint
+                              else 0),
+            checkpoint_path=args.checkpoint))
+        if args.log_every:
             dt = (time.perf_counter() - t0) / max(len(losses), 1)
             print(f"step {len(losses):4d}  loss {losses[-1]:.4f}  "
                   f"{dt:.3f}s/step")
-            logged_at = len(losses)
-        if args.checkpoint and args.checkpoint_every and \
-                len(losses) - saved_at >= args.checkpoint_every:
-            rt.save_state(args.checkpoint)
-            saved_at = len(losses)
 
     _print_events(rt)
     led = rt.ledger

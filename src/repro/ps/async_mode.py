@@ -35,8 +35,10 @@ disciplines enforce the bound:
 Execution is a deterministic discrete-event simulation driven by the
 topology's per-worker costs: each worker's pull → compute → push latency
 comes from its own ``LayerCosts`` under its ``BucketPlan`` (via
-``core.simulator``), the event queue orders completions by simulated time
-(ties by worker id), and gradient math runs for real through one jitted
+``core.simulator``), the :class:`repro.fleet.engine.EventQueue` orders
+completions by ``(simulated time, insertion seq, worker id)`` — the
+fleet-grade deterministic core — and gradient math runs for real
+through one jitted
 ``value_and_grad`` shared by all workers — so runs are reproducible
 bit-for-bit and the staleness trace is machine-checkable, while losses
 come from actually training the model (the smoke-CNN convergence test).
@@ -57,7 +59,6 @@ per-layer pytrees + a loss function": the smoke CNN
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
@@ -68,6 +69,7 @@ from repro.core.buckets import BucketPlan, decision_from_plan
 from repro.core.costmodel import TopologyCosts, iteration_time
 from repro.dist.collectives import (FlatSpec, flatten_tree, make_flat_spec,
                                     unflatten_tree)
+from repro.fleet.engine import EventQueue
 from repro.optim import Optimizer
 from repro.ps.server import PSServer, PushResult, StaleVersion
 from repro.ps.topology import PSTopology
@@ -391,9 +393,8 @@ class AsyncPSTrainer:
         loss, version, grads = self._compute(
             worker, batch_fn(worker, loop.attempts[worker]))
         loop.attempts[worker] += 1
-        heapq.heappush(loop.queue,
-                       (now + self._durations[worker], worker, version,
-                        loss, grads))
+        loop.queue.push(now + self._durations[worker], worker,
+                        (version, loss, grads))
 
     # -- reject throttle (PR 3 semantics, unchanged) --------------------
 
@@ -404,7 +405,9 @@ class AsyncPSTrainer:
         while loop.parked:                      # admission is unconditional
             self._start(loop, loop.parked.pop(0), loop.now, batch_fn)
         while loop.accepted < target:
-            t, w, version, loss, grads = heapq.heappop(loop.queue)
+            ev = loop.queue.pop()
+            t, w = ev.time, ev.worker
+            version, loss, grads = ev.payload
             loop.now = t
             result = self._push(w, version, grads)
             loop.log.events.append(AsyncPushEvent(
@@ -430,7 +433,7 @@ class AsyncPSTrainer:
                 self._start(loop, loop.parked.pop(0), now, batch_fn)
 
         def min_pin() -> int:
-            return min([e[2] for e in loop.queue] +
+            return min([e.payload[0] for e in loop.queue] +
                        [v for v, _, _, _, _ in loop.barrier])
 
         def drain(now: float) -> None:
@@ -463,7 +466,9 @@ class AsyncPSTrainer:
         drain(loop.now)
         admit(loop.now)
         while loop.accepted < target:
-            t, w, version, loss, grads = heapq.heappop(loop.queue)
+            ev = loop.queue.pop()
+            t, w = ev.time, ev.worker
+            version, loss, grads = ev.payload
             loop.now = t
             loop.barrier.append((version, t, w, loss, grads))
             drain(t)
@@ -504,7 +509,7 @@ class AsyncPSTrainer:
             # safety gate mirroring SSP admission; under group-atomic
             # commits every in-flight pin >= head, so this never starves
             while loop.parked:
-                pins = [e[2] for e in loop.queue] + \
+                pins = [e.payload[0] for e in loop.queue] + \
                        [e[0] for e in loop.barrier]
                 floor = min(pins) if pins else self.server.version
                 if self.server.version - floor > self.staleness:
@@ -515,7 +520,7 @@ class AsyncPSTrainer:
             while loop.barrier and loop.accepted < target:
                 loop.barrier.sort()
                 pin = loop.barrier[0][0]
-                if any(e[2] <= pin for e in loop.queue):
+                if any(e.payload[0] <= pin for e in loop.queue):
                     return          # the version group is still computing
                 group = [e for e in loop.barrier if e[0] == pin]
                 del loop.barrier[:len(group)]    # sorted ⇒ group is prefix
@@ -537,7 +542,9 @@ class AsyncPSTrainer:
         drain(loop.now)
         admit(loop.now)
         while loop.accepted < target:
-            t, w, version, loss, grads = heapq.heappop(loop.queue)
+            ev = loop.queue.pop()
+            t, w = ev.time, ev.worker
+            version, loss, grads = ev.payload
             loop.now = t
             loop.barrier.append((version, t, w, loss, grads))
             drain(t)
@@ -574,18 +581,18 @@ class AsyncPSTrainer:
 class _LoopState:
     """Resumable discrete-event loop state.
 
-    ``queue`` holds in-flight computations as ``(commit time, worker id,
-    compute version, loss, grads)`` — one in-flight iteration per worker
-    makes ``(time, id)`` unique, so the payload is never compared.
-    ``barrier`` holds completed-but-uncommitted computations (wait
-    throttle) as ``(pin version, completion time, worker, loss, grads)``;
-    ``parked`` holds workers awaiting admission, FIFO.
+    ``queue`` is the deterministic :class:`~repro.fleet.engine.EventQueue`
+    holding in-flight computations; each event's payload is ``(compute
+    version, loss, grads)`` and the engine's ``(time, seq, worker)`` key
+    orders commits without ever comparing payloads.  ``barrier`` holds
+    completed-but-uncommitted computations (wait throttle) as ``(pin
+    version, completion time, worker, loss, grads)``; ``parked`` holds
+    workers awaiting admission, FIFO.
     """
 
     log: AsyncRunLog
     parked: List[int]
-    queue: List[Tuple[float, int, int, float, List[Any]]] = \
-        dataclasses.field(default_factory=list)
+    queue: EventQueue = dataclasses.field(default_factory=EventQueue)
     barrier: List[Tuple[int, float, int, float, List[Any]]] = \
         dataclasses.field(default_factory=list)
     now: float = 0.0

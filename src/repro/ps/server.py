@@ -67,6 +67,13 @@ class TransferLedger:
     num_pushes: int = 0
     rejected_pushes: int = 0
     waited_pushes: int = 0        # SSP wait-throttle: commits that blocked
+    migrated_bytes: int = 0       # re-sharding: params + opt state moved
+    num_reshards: int = 0
+
+    def record_migration(self, nbytes: int) -> None:
+        """Account one re-shard's server-to-server state movement."""
+        self.migrated_bytes += nbytes
+        self.num_reshards += 1
 
     def record_pull(self, worker: int, nbytes: int,
                     wire_bytes: Optional[int] = None) -> None:
@@ -279,6 +286,54 @@ class PSServer:
         committed *now* (the quantity the bounded-staleness gate compares
         against ``staleness_bound``)."""
         return self.version - version
+
+    def drop_pending(self, worker: int) -> int:
+        """Discard every uncommitted segmented push of ``worker`` (crash /
+        departure cleanup); returns how many pending sets were dropped.
+        Segment bytes already on the wire stay in the ledger — a crashed
+        worker's partial push cost real uplink traffic."""
+        keys = [k for k in self._pending if k[0] == worker]
+        for k in keys:
+            del self._pending[k]
+        return len(keys)
+
+    # ------------------------------------------------------------------
+    # elastic re-sharding
+    # ------------------------------------------------------------------
+
+    def reshard(self, topology: PSTopology) -> Dict[str, int]:
+        """Re-partition the layers across ``topology``'s server shards
+        **without losing versioned state**.
+
+        Shard ownership is a pure view over the per-layer buffers
+        (:meth:`shard_view`), so splitting or merging shards moves layer
+        state between servers but never rewrites it: the head parameters,
+        every retained snapshot, the optimizer moments, and the version
+        counter are all bit-identical across the call — a pull pinned at
+        a pre-migration version returns the exact pre-migration bytes.
+        What *does* cost something is the migration itself: every layer
+        whose owning shard changed ships its parameters plus its
+        optimizer moment slots server-to-server, accounted in
+        ``ledger.migrated_bytes``.
+
+        Returns ``{"moved_layers": n, "migrated_bytes": b,
+        "num_servers": S}``.  The new topology may also change the worker
+        set — shard routing only depends on ``num_servers``.
+        """
+        old_owner = {l: self.topology.shard_of_layer(l, self.num_layers)
+                     for l in range(self.num_layers)}
+        self.topology = topology
+        moved = [l for l in range(self.num_layers)
+                 if topology.shard_of_layer(l, self.num_layers)
+                 != old_owner[l]]
+        # per-layer moment slots present under this optimizer (SGD: 0,
+        # momentum: 1, AdamW: 2) — each is parameter-sized fp32
+        slots = sum(1 for m in (self._opt_state.mu, self._opt_state.nu)
+                    if m is not None)
+        migrated = sum(self.specs[l].total * 4 for l in moved) * (1 + slots)
+        self.ledger.record_migration(migrated)
+        return {"moved_layers": len(moved), "migrated_bytes": migrated,
+                "num_servers": topology.num_servers}
 
     # ------------------------------------------------------------------
     # checkpointing (``repro.runtime`` save_state/restore_state)

@@ -18,6 +18,7 @@ idle-window bookkeeping) lives here too, in :mod:`repro.runtime.replan`.
 
 from repro.runtime.config import (DYNAMIC_RUNTIMES, RUNTIME_REGIMES,
                                   CompressionConfig, ExecutionConfig,
+                                  FleetConfig, FleetEventConfig,
                                   MeasureConfig, NetworkConfig,
                                   RuntimeConfig, ScheduleConfig,
                                   TopologyConfig)
@@ -29,6 +30,7 @@ from repro.runtime.replan import (PlanStepCache, ReplanMixin,
 __all__ = [
     "RuntimeConfig", "ScheduleConfig", "ExecutionConfig", "MeasureConfig",
     "NetworkConfig", "TopologyConfig", "CompressionConfig",
+    "FleetConfig", "FleetEventConfig",
     "RUNTIME_REGIMES", "DYNAMIC_RUNTIMES",
     "Trainer", "EvalEvent",
     "PlanStepCache", "RescheduleEvent", "ReplanMixin",

@@ -25,7 +25,7 @@ from jax.sharding import Mesh
 
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.configs.base import ArchConfig, InputShape
-from repro.runtime.config import (NetworkConfig, RuntimeConfig,
+from repro.runtime.config import (FleetConfig, NetworkConfig, RuntimeConfig,
                                   TopologyConfig)
 from repro.runtime.registry import register_runtime
 
@@ -96,6 +96,15 @@ class RuntimeAdapter:
             raise ValueError(f"eval_fn needs eval_every >= 1, got "
                              f"{eval_every}")
 
+    @staticmethod
+    def _check_checkpoint(checkpoint_every: int,
+                          checkpoint_path: Optional[str]) -> None:
+        if checkpoint_every and checkpoint_path is None:
+            raise ValueError("checkpoint_every needs a checkpoint_path")
+        if checkpoint_path is not None and checkpoint_every < 1:
+            raise ValueError(f"checkpoint_path needs checkpoint_every >= 1, "
+                             f"got {checkpoint_every}")
+
     def _record_eval(self, eval_fn) -> None:
         from repro.runtime.protocol import EvalEvent
         self._eval_events.append(
@@ -103,13 +112,17 @@ class RuntimeAdapter:
 
     def fit(self, steps: int, *, log_every: int = 0,
             eval_fn: Optional[Callable[[], float]] = None,
-            eval_every: int = 0) -> List[float]:
+            eval_every: int = 0, checkpoint_every: int = 0,
+            checkpoint_path: Optional[str] = None) -> List[float]:
         """Run ``steps`` units of progress from the configured data,
         printing a one-line progress report every ``log_every`` units.
         With ``eval_fn`` (zero-arg, returns a scalar loss), evaluate every
-        ``eval_every`` units and record an ``EvalEvent`` into
-        ``events``."""
+        ``eval_every`` units and record an ``EvalEvent`` into ``events``.
+        With ``checkpoint_every``/``checkpoint_path``, ``save_state`` runs
+        at every ``checkpoint_every``-unit boundary — a killed run
+        restarts from the last periodic checkpoint."""
         self._check_eval(eval_fn, eval_every)
+        self._check_checkpoint(checkpoint_every, checkpoint_path)
         losses = []
         for _ in range(steps):
             losses.append(self.step(self._batch_fn(self._data_idx)))
@@ -117,6 +130,9 @@ class RuntimeAdapter:
                 print(f"step {self._data_idx:4d}  loss {losses[-1]:.4f}")
             if eval_fn is not None and self._data_idx % eval_every == 0:
                 self._record_eval(eval_fn)
+            if checkpoint_every and \
+                    self._data_idx % checkpoint_every == 0:
+                self.save_state(checkpoint_path)
         return losses
 
     def step(self, batch) -> float:
@@ -477,17 +493,23 @@ class _AsyncBase(RuntimeAdapter):
 
     def fit(self, steps: int, *, log_every: int = 0,
             eval_fn: Optional[Callable[[], float]] = None,
-            eval_every: int = 0) -> List[float]:
+            eval_every: int = 0, checkpoint_every: int = 0,
+            checkpoint_path: Optional[str] = None) -> List[float]:
         # accepted pushes land in chunks (BSP aggregation can commit a
-        # whole cohort), so evals trigger on *boundary crossings* of the
-        # cumulative push count rather than exact multiples
+        # whole cohort), so evals and checkpoints trigger on *boundary
+        # crossings* of the cumulative push count rather than exact
+        # multiples
         self._check_eval(eval_fn, eval_every)
+        self._check_checkpoint(checkpoint_every, checkpoint_path)
         losses: List[float] = []
         wfn = self._worker_batch_fn()
         while len(losses) < steps:
             chunk = min(log_every or steps, steps - len(losses))
             if eval_fn is not None:
                 chunk = min(chunk, eval_every - self._data_idx % eval_every)
+            if checkpoint_every:
+                chunk = min(chunk, checkpoint_every -
+                            self._data_idx % checkpoint_every)
             before = self._data_idx
             losses.extend(self._drive(chunk, wfn))
             if log_every:
@@ -495,6 +517,9 @@ class _AsyncBase(RuntimeAdapter):
             if eval_fn is not None and \
                     self._data_idx // eval_every > before // eval_every:
                 self._record_eval(eval_fn)
+            if checkpoint_every and self._data_idx // checkpoint_every > \
+                    before // checkpoint_every:
+                self.save_state(checkpoint_path)
         return losses
 
     def step(self, batch) -> float:
@@ -614,3 +639,83 @@ class DynamicPSAsyncRuntime(_AsyncBase):
 
     def timeline(self):
         return self.trainer.trainer.log
+
+
+@register_runtime("fleet-async",
+                  description="elastic worker fleet on the deterministic "
+                              "event engine: churn-driven re-planning, "
+                              "server re-sharding, measured drift "
+                              "detection")
+class FleetRuntime(_AsyncBase):
+    """Elastic membership over the bounded-staleness event loop.
+
+    The initial fleet comes from the topology block (one
+    :class:`~repro.fleet.WorkerSpec` per configured link); the fleet
+    block scripts or synthesizes membership churn and tunes the stall
+    and drift detectors.  Unlike the other async adapters, ``save_state``
+    also serializes the *event-loop* state (in-flight work, admission
+    queue, simulated clock), so a restored run resumes mid-simulation
+    bit-identically instead of restarting the loop at time 0."""
+
+    def __init__(self, config, arch, batch_fn):
+        super().__init__(config, arch, batch_fn)
+        from repro.fleet import FleetTrainer, WorkerSpec
+        from repro.models.profiles import layer_profiles
+        topo_cfg = config.schedule.topology or TopologyConfig()
+        topo = topo_cfg.build(default_workers=len(jax.devices()))
+        specs = {w: WorkerSpec(down_bps=link.down.bandwidth_bps,
+                               up_bps=link.up.bandwidth_bps,
+                               flops=topo.worker_flops[w])
+                 for w, link in enumerate(topo.links)}
+        fleet_cfg = config.fleet or FleetConfig()
+        self.trainer = FleetTrainer(
+            init_layers=self._layers, loss_fn=self._loss_fn,
+            optimizer=config.build_optimizer(), workers=specs,
+            schedule=fleet_cfg.build_schedule(tuple(specs)),
+            num_servers=topo.num_servers,
+            workers_per_shard=fleet_cfg.workers_per_shard,
+            staleness=config.execution.staleness or 0,
+            throttle=config.execution.throttle,
+            strategy=config.schedule.strategy,
+            profiles=layer_profiles(arch, self.shape),
+            compressor=config.compression.build(),
+            drift_detector=fleet_cfg.build_detector(),
+            stall_factor=fleet_cfg.stall_factor,
+            check_interval=fleet_cfg.check_interval)
+
+    @property
+    def events(self):
+        timed = sorted(tuple(self.trainer.replan_events) +
+                       tuple(self.trainer.membership_events),
+                       key=lambda e: e.sim_time)
+        return tuple(timed) + tuple(self._eval_events)
+
+    @property
+    def _server(self):
+        return self.trainer.server
+
+    def _run_pushes(self, num_pushes, wfn):
+        return self.trainer.run(num_pushes, wfn, reset=not self._started)
+
+    def timeline(self):
+        return self.trainer.log
+
+    def save_state(self, path: str) -> None:
+        """Checkpoint server state plus the live event loop.
+
+        The loop (engine queue, in-flight gradients, SSP barrier,
+        membership roster, detector streams, run log) lands next to the
+        parameter checkpoint at ``path + ".loop"``."""
+        self._save_tree(path, {"server": self.trainer.server.state_dict()})
+        self.trainer.save_loop_state(path + ".loop")
+
+    def restore_state(self, path: str) -> None:
+        tree = self._load_tree(path,
+                               {"server": self.trainer.server.state_dict()})
+        self.trainer.server.load_state_dict(tree["server"])
+        self.trainer.restore_loop_state(path + ".loop")
+        # the loop resumes mid-simulation: keep driving the restored run
+        # instead of resetting to time 0
+        self._started = True
+        log = self.trainer.log
+        self._reported = len(log.accepted) if log is not None else 0

@@ -38,8 +38,10 @@ RUNTIME_REGIMES = {
     "dynamic-ps": "ps-sync",
     "ps-async": "ps-async",
     "dynamic-ps-async": "ps-async",
+    "fleet-async": "ps-async",
 }
-DYNAMIC_RUNTIMES = ("dynamic", "dynamic-ps", "dynamic-ps-async")
+DYNAMIC_RUNTIMES = ("dynamic", "dynamic-ps", "dynamic-ps-async",
+                    "fleet-async")
 
 _STRATEGIES = ("sequential", "lbl", "ibatch", "dynacomm", "bruteforce")
 _THROTTLES = ("reject", "wait")
@@ -242,6 +244,136 @@ class CompressionConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetEventConfig:
+    """One scripted membership/environment change (``repro.fleet``).
+
+    ``kind="join"`` may carry the joining worker's link/compute spec via
+    ``down_gbps``/``up_gbps``/``flops`` (defaults when unset);
+    ``kind="fail"`` picks ``mode`` (``crash`` | ``stall``);
+    ``kind="drift"`` scales the worker's true iteration time by
+    ``factor``.
+    """
+
+    time: float = 0.0
+    kind: str = "join"
+    worker: int = 0
+    mode: str = "crash"
+    factor: float = 1.0
+    down_gbps: Optional[float] = None
+    up_gbps: Optional[float] = None
+    flops: Optional[float] = None
+
+    def __post_init__(self):
+        from repro.fleet.membership import FAIL_MODES, FLEET_EVENT_KINDS
+        if self.kind not in FLEET_EVENT_KINDS:
+            raise ValueError(f"kind must be one of {FLEET_EVENT_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.mode not in FAIL_MODES:
+            raise ValueError(f"mode must be one of {FAIL_MODES}, got "
+                             f"{self.mode!r}")
+        if self.time < 0:
+            raise ValueError(f"time must be >= 0, got {self.time}")
+        if self.factor <= 0:
+            raise ValueError(f"factor must be positive, got {self.factor}")
+        if self.kind != "join" and (self.down_gbps is not None or
+                                    self.up_gbps is not None or
+                                    self.flops is not None):
+            raise ValueError(f"only join events carry a worker spec "
+                             f"(got kind={self.kind!r})")
+
+    def build(self):
+        """The :class:`repro.fleet.FleetEvent` this block describes."""
+        from repro.fleet.membership import FleetEvent, WorkerSpec
+        spec = None
+        if self.kind == "join" and (self.down_gbps is not None or
+                                    self.up_gbps is not None or
+                                    self.flops is not None):
+            defaults = WorkerSpec()
+            spec = WorkerSpec(
+                down_bps=(self.down_gbps * 1e9 if self.down_gbps is not None
+                          else defaults.down_bps),
+                up_bps=(self.up_gbps * 1e9 if self.up_gbps is not None
+                        else defaults.up_bps),
+                flops=self.flops if self.flops is not None
+                else defaults.flops)
+        return FleetEvent(time=self.time, kind=self.kind,
+                          worker=self.worker, mode=self.mode,
+                          factor=self.factor, spec=spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Elastic-fleet knobs of the ``fleet-async`` runtime.
+
+    The membership script comes from either explicit ``events`` or a
+    synthesized churn process (``churn`` events per simulated second up
+    to ``horizon``, reproducible per ``churn_seed``) — not both.
+    ``workers_per_shard > 0`` lets the server's shard count track the
+    fleet (``S = ceil(active / workers_per_shard)``), re-sharding in
+    place on membership changes.  The remaining knobs parameterize the
+    failure detector and the per-worker drift detector.
+    """
+
+    events: Tuple[FleetEventConfig, ...] = ()
+    churn: float = 0.0               # synthesized events per simulated second
+    horizon: float = 0.0             # synthesized-churn time window
+    churn_seed: int = 0
+    workers_per_shard: int = 0       # 0 ⇒ shard count fixed by topology
+    check_interval: float = 0.0      # 0 ⇒ slowest believed iteration
+    stall_factor: float = 4.0
+    drift_alpha: float = 0.2
+    drift_threshold: float = 0.3
+    drift_patience: int = 3
+    drift_warmup: int = 2
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(
+            FleetEventConfig(**e) if isinstance(e, dict) else e
+            for e in self.events))
+        if self.churn < 0:
+            raise ValueError(f"churn must be >= 0, got {self.churn}")
+        if self.churn > 0 and self.horizon <= 0:
+            raise ValueError("synthesized churn needs a positive horizon")
+        if self.churn > 0 and self.events:
+            raise ValueError("give either explicit events or synthesized "
+                             "churn, not both")
+        if self.workers_per_shard < 0:
+            raise ValueError(f"workers_per_shard must be >= 0, got "
+                             f"{self.workers_per_shard}")
+        if self.check_interval < 0:
+            raise ValueError(f"check_interval must be >= 0, got "
+                             f"{self.check_interval}")
+        if self.stall_factor <= 1:
+            raise ValueError(f"stall_factor must be > 1, got "
+                             f"{self.stall_factor}")
+        if not 0 < self.drift_alpha <= 1:
+            raise ValueError(f"drift_alpha must be in (0, 1], got "
+                             f"{self.drift_alpha}")
+        if self.drift_threshold <= 0:
+            raise ValueError(f"drift_threshold must be positive, got "
+                             f"{self.drift_threshold}")
+        if self.drift_patience < 1 or self.drift_warmup < 1:
+            raise ValueError("drift_patience and drift_warmup must be >= 1")
+
+    def build_schedule(self, initial_workers):
+        """The :class:`repro.fleet.FleetSchedule` this block describes."""
+        from repro.fleet.membership import FleetSchedule
+        if self.churn > 0:
+            return FleetSchedule.synthesize(
+                initial_workers, churn=self.churn, horizon=self.horizon,
+                seed=self.churn_seed)
+        return FleetSchedule(tuple(e.build() for e in self.events))
+
+    def build_detector(self):
+        """The :class:`repro.fleet.FleetDriftDetector` this describes."""
+        from repro.fleet.drift import FleetDriftDetector
+        return FleetDriftDetector(alpha=self.drift_alpha,
+                                  threshold=self.drift_threshold,
+                                  patience=self.drift_patience,
+                                  warmup=self.drift_warmup)
+
+
+@dataclasses.dataclass(frozen=True)
 class MeasureConfig:
     """Where fc/bc cost vectors come from."""
 
@@ -288,6 +420,7 @@ class RuntimeConfig:
     measure: MeasureConfig = dataclasses.field(default_factory=MeasureConfig)
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
+    fleet: Optional[FleetConfig] = None
 
     def __post_init__(self):
         if self.runtime not in RUNTIME_REGIMES:
@@ -338,6 +471,22 @@ class RuntimeConfig:
                              "react to it — use runtime='dynamic-ps' or "
                              f"'dynamic-ps-async' (the {self.runtime!r} "
                              f"runtime plans once at startup)")
+        if self.fleet is not None and self.runtime != "fleet-async":
+            raise ValueError(f"the fleet block configures the elastic "
+                             f"'fleet-async' runtime (got runtime "
+                             f"{self.runtime!r})")
+        if self.runtime == "fleet-async":
+            if self.execution.aggregate:
+                raise ValueError("aggregate=True needs fixed full-fleet "
+                                 "cohorts; the elastic fleet-async runtime "
+                                 "cannot aggregate — drop aggregation or "
+                                 "use runtime='ps-async'")
+            if self.schedule.topology is not None and \
+                    self.schedule.topology.up_shift_factor is not None:
+                raise ValueError("fleet-async re-plans off measured drift "
+                                 "and membership events, not a scripted "
+                                 "uplink shift — use a fleet drift event "
+                                 "instead of up_shift_factor")
         if self.compression.enabled and not regime.startswith("ps"):
             raise ValueError(
                 f"compression rides the PS push path (segmented gradient "
@@ -402,6 +551,8 @@ class RuntimeConfig:
         sub("execution", ExecutionConfig)
         sub("measure", MeasureConfig)
         sub("compression", CompressionConfig)
+        sub("fleet", FleetConfig)    # nested event dicts handled by its
+                                     # __post_init__
         unknown = set(obj) - {f.name for f in dataclasses.fields(cls)}
         if unknown:
             raise ValueError(f"unknown RuntimeConfig fields "

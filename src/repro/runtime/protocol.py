@@ -10,7 +10,9 @@ launchers, examples, and benchmarks drive any of them identically:
   source; returns one loss per unit.  With an ``eval_fn`` (a zero-arg
   callable returning a scalar loss), the runtime calls it every
   ``eval_every`` units and records an :class:`EvalEvent` into
-  ``events``;
+  ``events``; with ``checkpoint_every``/``checkpoint_path``, it calls
+  ``save_state`` at every ``checkpoint_every``-unit boundary, so a
+  killed run restarts from the last periodic checkpoint bit-identically;
 * ``step(batch)`` — one unit of progress on an explicit batch (async
   regimes feed ``batch`` to every worker attempt until the next push
   commits);
@@ -49,7 +51,8 @@ class Trainer(Protocol):
 
     def fit(self, steps: int, *, log_every: int = 0,
             eval_fn: Optional[Callable[[], float]] = None,
-            eval_every: int = 0) -> List[float]:
+            eval_every: int = 0, checkpoint_every: int = 0,
+            checkpoint_path: Optional[str] = None) -> List[float]:
         """Run ``steps`` units of progress; one loss per unit."""
         ...
 

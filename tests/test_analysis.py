@@ -15,9 +15,9 @@ import pytest
 
 from repro.analysis import (collective_counts, collective_summary,
                             lint_paths, lint_source, parse_hlo, type_bytes,
-                            verify_cache, verify_no_collectives,
-                            verify_push_ledger, verify_schedule,
-                            verify_wire_model)
+                            verify_cache, verify_fleet_membership,
+                            verify_no_collectives, verify_push_ledger,
+                            verify_schedule, verify_wire_model)
 from repro.analysis.conformance import (INT8_TILE, expected_ag_bytes,
                                         expected_rs_bytes,
                                         independent_wire_bytes,
@@ -417,6 +417,136 @@ class TestPushLedgerAudit:
         assert any("push messages" in f.message for f in findings)
 
 
+class TestElasticLedgerAudit:
+    """verify_push_ledger over FleetTrainer-style push *histories*: a
+    worker that was re-planned mid-run maps to ``(plan, full_iterations,
+    extra_segments)`` entries instead of one plan."""
+
+    def _setup(self, scheme="none"):
+        from repro.compress.compressor import make_compressor
+        comp = make_compressor(scheme) if scheme != "none" else None
+        plan_a, plan_b = plan_for("dynacomm"), plan_for("sequential")
+        specs = fake_specs(8)
+        return comp, plan_a, plan_b, specs
+
+    def _ledger_for(self, history_by_worker, specs, comp):
+        pushed, wire, n_push = {}, {}, 0
+        for w, history in history_by_worker.items():
+            logical = wb = 0
+            for plan, full, extra in history:
+                seg_l = [sum(specs[l].total * 4 for l in b)
+                         for b in plan.backward]
+                seg_w = [segment_wire_bytes(specs, b, comp)
+                         for b in plan.backward]
+                logical += full * sum(seg_l) + sum(seg_l[:extra])
+                wb += full * sum(seg_w) + sum(seg_w[:extra])
+                n_push += full * len(seg_l) + extra
+            pushed[w], wire[w] = logical, wb
+        return SimpleNamespace(pushed_bytes=pushed,
+                               pushed_wire_bytes=wire,
+                               num_pushes=n_push)
+
+    @pytest.mark.parametrize("scheme", ["none", "int8"])
+    def test_clean_history(self, scheme):
+        comp, plan_a, plan_b, specs = self._setup(scheme)
+        # re-planned after 2 iterations, then crashed 1 segment into an
+        # iteration under the new plan — the departed ledger closes
+        histories = {0: ((plan_a, 2, 0), (plan_b, 3, 1))}
+        ledger = self._ledger_for(histories, specs, comp)
+        assert verify_push_ledger(ledger, histories, specs, comp) == []
+
+    def test_mixed_elastic_and_static_workers(self):
+        comp, plan_a, plan_b, specs = self._setup()
+        histories = {0: ((plan_a, 1, 0), (plan_b, 1, 0)),
+                     1: plan_a}          # static worker: one plain plan
+        pushed = self._ledger_for({0: histories[0]}, specs, comp)
+        seg_l = [sum(specs[l].total * 4 for l in b)
+                 for b in plan_a.backward]
+        pushed.pushed_bytes[1] = sum(seg_l)
+        pushed.pushed_wire_bytes[1] = sum(
+            segment_wire_bytes(specs, b, comp) for b in plan_a.backward)
+        pushed.num_pushes += len(plan_a.backward)
+        assert verify_push_ledger(pushed, histories, specs, comp) == []
+
+    def test_history_byte_mismatch_flagged(self):
+        comp, plan_a, plan_b, specs = self._setup()
+        histories = {0: ((plan_a, 2, 0), (plan_b, 1, 2))}
+        ledger = self._ledger_for(histories, specs, comp)
+        ledger.pushed_bytes[0] += 4
+        findings = verify_push_ledger(ledger, histories, specs, comp)
+        assert findings
+        assert all(f.code == "SCHED-LEDGER" for f in findings)
+        assert any("push history" in f.message for f in findings)
+
+    def test_history_wire_mismatch_flagged(self):
+        comp, plan_a, plan_b, specs = self._setup("int8")
+        histories = {0: ((plan_a, 2, 1),)}
+        ledger = self._ledger_for(histories, specs, comp)
+        ledger.pushed_wire_bytes[0] -= 1
+        findings = verify_push_ledger(ledger, histories, specs, comp)
+        assert any("wire bytes" in f.message for f in findings)
+        assert all(f.code == "SCHED-LEDGER" for f in findings)
+
+
+class TestFleetMembershipAudit:
+    """verify_fleet_membership over crafted run logs + roster history."""
+
+    @staticmethod
+    def _event(worker, t, version, staleness):
+        return SimpleNamespace(worker=worker, sim_time=t, version=version,
+                               result=SimpleNamespace(staleness=staleness))
+
+    @staticmethod
+    def _log(events):
+        return SimpleNamespace(accepted=list(events))
+
+    def test_clean_run(self):
+        log = self._log([
+            self._event(0, 0.1, 0, 0),
+            self._event(7, 0.6, 5, 1),    # joined at v5, pushes from v5
+            self._event(0, 0.7, 6, 2),
+        ])
+        joined = {0: (0.0, 0), 7: (0.5, 5)}
+        departed = {1: (0.4, "crash")}
+        assert verify_fleet_membership(log, joined, departed,
+                                       staleness_bound=2) == []
+
+    def test_staleness_breach_flagged(self):
+        log = self._log([self._event(0, 0.1, 0, 3)])
+        findings = verify_fleet_membership(log, {0: (0.0, 0)}, {},
+                                           staleness_bound=2)
+        assert [f.code for f in findings] == ["FLEET-STALENESS"]
+
+    def test_commit_before_join_flagged(self):
+        log = self._log([self._event(7, 0.3, 5, 0)])
+        findings = verify_fleet_membership(log, {7: (0.5, 5)}, {},
+                                           staleness_bound=2)
+        assert [f.code for f in findings] == ["FLEET-MEMBER"]
+        assert "before its join" in findings[0].message
+
+    def test_push_older_than_join_version_flagged(self):
+        log = self._log([self._event(7, 0.6, 3, 1)])
+        findings = verify_fleet_membership(log, {7: (0.5, 5)}, {},
+                                           staleness_bound=2)
+        assert [f.code for f in findings] == ["FLEET-MEMBER"]
+        assert "older than the head at its join" in findings[0].message
+
+    def test_commit_after_departure_flagged(self):
+        log = self._log([self._event(1, 0.9, 8, 0)])
+        findings = verify_fleet_membership(log, {1: (0.0, 0)},
+                                           {1: (0.4, "crash")},
+                                           staleness_bound=2)
+        assert [f.code for f in findings] == ["FLEET-MEMBER"]
+        assert "after its departure" in findings[0].message
+
+    def test_never_joined_flagged(self):
+        log = self._log([self._event(9, 0.2, 1, 0)])
+        findings = verify_fleet_membership(log, {0: (0.0, 0)}, {},
+                                           staleness_bound=2)
+        assert [f.code for f in findings] == ["FLEET-MEMBER"]
+        assert "never joined" in findings[0].message
+
+
 # ---------------------------------------------------------------------------
 # AST lints: each seeded hazard fires; suppression works; src/ is clean
 # ---------------------------------------------------------------------------
@@ -460,6 +590,11 @@ class TestLints:
             ["DET-WALL-CLOCK"]
         assert codes(src, path="src/repro/core/simulator.py") == \
             ["DET-WALL-CLOCK"]
+        # the fleet event engine and everything feeding it must stay
+        # wall-clock-free (bit-reproducibility at scale)
+        for mod in ("engine", "membership", "drift", "trainer"):
+            assert codes(src, path=f"src/repro/fleet/{mod}.py") == \
+                ["DET-WALL-CLOCK"], mod
         # wall clock is fine in profiling / launch code
         assert codes(src, path="src/repro/launch/bench.py") == []
 

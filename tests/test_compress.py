@@ -599,7 +599,8 @@ class TestCompressionConfig:
             cost_source="analytic", ps_servers=2, ps_workers=3,
             down_gbps=10.0, up_gbps=1.0, up_shift_gbps=None,
             worker_flops=1e10, throttle="reject", aggregate=False,
-            compress="topk", topk_fraction=0.02, no_error_feedback=True)
+            compress="topk", topk_fraction=0.02, no_error_feedback=True,
+            fleet_schedule=None, workers_per_shard=0)
         cfg = config_from_flags(args)
         assert cfg.runtime == "ps-async"        # staleness upgrades
         assert cfg.compression.scheme == "topk"

@@ -15,9 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.runtime import (ExecutionConfig, MeasureConfig, NetworkConfig,
-                           RuntimeConfig, ScheduleConfig, TopologyConfig,
-                           Trainer, build_runtime, runtime_names)
+from repro.runtime import (ExecutionConfig, FleetConfig, FleetEventConfig,
+                           MeasureConfig, NetworkConfig, RuntimeConfig,
+                           ScheduleConfig, TopologyConfig, Trainer,
+                           build_runtime, runtime_names)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SMOKE_DIR = os.path.join(REPO, "examples", "runtime_configs")
@@ -171,6 +172,80 @@ class TestRuntimeConfig:
             RuntimeConfig(runtime="zero", optimizer="lion")
 
 
+class TestFleetConfig:
+    def test_round_trip_with_events(self):
+        c = RuntimeConfig(
+            runtime="fleet-async", **SMOKE,
+            execution=ExecutionConfig(staleness=2, throttle="wait"),
+            schedule=ScheduleConfig(topology=TopologyConfig(
+                servers=2, workers=3)),
+            fleet=FleetConfig(events=(
+                FleetEventConfig(time=0.01, kind="join", worker=3,
+                                 down_gbps=5.0, up_gbps=0.5),
+                FleetEventConfig(time=0.03, kind="fail", worker=1,
+                                 mode="stall"),
+                FleetEventConfig(time=0.05, kind="drift", worker=0,
+                                 factor=2.0),
+            ), workers_per_shard=2, stall_factor=3.0))
+        again = RuntimeConfig.from_json(c.to_json())
+        assert again == c
+        assert again.fleet.events[0].down_gbps == 5.0
+
+    def test_round_trip_with_churn(self):
+        c = RuntimeConfig(
+            runtime="fleet-async", **SMOKE,
+            fleet=FleetConfig(churn=2.0, horizon=1.5, churn_seed=7))
+        assert RuntimeConfig.from_json(c.to_json()) == c
+
+    def test_event_dicts_coerced(self):
+        cfg = FleetConfig(events=(
+            {"time": 0.1, "kind": "leave", "worker": 0},))
+        assert isinstance(cfg.events[0], FleetEventConfig)
+        assert cfg.events[0].kind == "leave"
+
+    def test_fleet_field_needs_fleet_runtime(self):
+        with pytest.raises(ValueError, match="fleet"):
+            RuntimeConfig(runtime="ps-async", fleet=FleetConfig())
+
+    def test_aggregate_rejected_on_fleet(self):
+        with pytest.raises(ValueError, match="aggregate"):
+            RuntimeConfig(runtime="fleet-async",
+                          execution=ExecutionConfig(throttle="wait",
+                                                    aggregate=True))
+
+    def test_validation_of_scalars(self):
+        for bad in (dict(churn=-1.0), dict(churn=1.0),  # churn w/o horizon
+                    dict(churn=1.0, horizon=1.0,
+                         events=(FleetEventConfig(time=0.1, kind="leave",
+                                                  worker=0),)),
+                    dict(stall_factor=1.0), dict(drift_alpha=0.0),
+                    dict(drift_patience=0), dict(workers_per_shard=-1)):
+            with pytest.raises(ValueError):
+                FleetConfig(**bad)
+        with pytest.raises(ValueError, match="join"):
+            FleetEventConfig(time=0.1, kind="leave", worker=0,
+                             down_gbps=5.0)
+        with pytest.raises(ValueError, match="kind"):
+            FleetEventConfig(time=0.1, kind="explode", worker=0)
+
+    def test_build_schedule_and_detector(self):
+        explicit = FleetConfig(events=(
+            FleetEventConfig(time=0.1, kind="leave", worker=1),))
+        sched = explicit.build_schedule((0, 1, 2))
+        assert len(sched) == 1 and sched.events[0].kind == "leave"
+        synth = FleetConfig(churn=4.0, horizon=2.0, churn_seed=3)
+        a = synth.build_schedule(range(8))
+        b = synth.build_schedule(range(8))
+        assert a == b                    # seeded churn is reproducible
+        det = FleetConfig(drift_threshold=0.5).build_detector()
+        assert det.threshold == 0.5
+
+    def test_fleet_runtime_regime_views(self):
+        c = RuntimeConfig(runtime="fleet-async",
+                          execution=ExecutionConfig(staleness=1))
+        assert c.regime == "ps-async" and c.is_dynamic
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -179,8 +254,8 @@ class TestRuntimeConfig:
 class TestRegistry:
     def test_all_runtimes_registered(self):
         assert runtime_names() == ("dynamic", "dynamic-ps",
-                                   "dynamic-ps-async", "local", "ps",
-                                   "ps-async", "zero")
+                                   "dynamic-ps-async", "fleet-async",
+                                   "local", "ps", "ps-async", "zero")
 
     def test_register_unknown_name_rejected(self):
         from repro.runtime.registry import register_runtime
@@ -234,7 +309,7 @@ LEDGER_KEYS = {"pull_bytes", "push_bytes", "num_pulls", "num_pushes"}
 class TestEveryRuntime:
     @pytest.mark.parametrize("name", ["local", "zero", "ps", "ps-async",
                                       "dynamic", "dynamic-ps",
-                                      "dynamic-ps-async"])
+                                      "dynamic-ps-async", "fleet-async"])
     def test_builds_from_json_and_steps(self, built, name):
         rt, path = built(name)
         assert isinstance(rt, Trainer), f"{name} breaks the protocol"
@@ -319,6 +394,45 @@ class TestSaveRestore:
         other = built("zero")[0]
         with pytest.raises(ValueError, match="written by runtime"):
             other.restore_state(path)
+
+
+class TestPeriodicCheckpoint:
+    """fit(checkpoint_every=, checkpoint_path=) — the in-fit periodic
+    checkpoint hook on the Trainer protocol."""
+
+    def test_local_mid_run_resume_is_bit_identical(self, tmp_path):
+        config = RuntimeConfig(runtime="local", **SMOKE)
+        ref_losses = build_runtime(config).fit(5)
+        path = str(tmp_path / "ck.npz")
+        a = build_runtime(config)
+        # the last periodic save lands at step 3 — the checkpoint is a
+        # mid-run snapshot, not the final state
+        a.fit(5, checkpoint_every=3, checkpoint_path=path)
+        b = build_runtime(config)
+        b.restore_state(path)
+        assert b._data_idx == 3
+        assert b.fit(2) == ref_losses[3:]
+
+    def test_async_adapter_checkpoints_on_boundary(self, tmp_path):
+        config = RuntimeConfig(
+            runtime="ps-async", **SMOKE,
+            execution=ExecutionConfig(staleness=1, throttle="wait"),
+            schedule=ScheduleConfig(topology=TopologyConfig(servers=1,
+                                                            workers=2)))
+        path = str(tmp_path / "async.npz")
+        rt = build_runtime(config)
+        rt.fit(4, checkpoint_every=2, checkpoint_path=path)
+        assert os.path.exists(path)
+        restored = build_runtime(config)
+        restored.restore_state(path)     # round-trips through save_state
+        assert np.isfinite(restored.fit(1)[0])
+
+    def test_checkpoint_validation(self, built):
+        rt, _ = built("local")
+        with pytest.raises(ValueError, match="checkpoint_path"):
+            rt.fit(1, checkpoint_every=2)
+        with pytest.raises(ValueError, match="checkpoint_every"):
+            rt.fit(1, checkpoint_path="somewhere.npz")
 
 
 # ---------------------------------------------------------------------------
