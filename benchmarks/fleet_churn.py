@@ -55,6 +55,9 @@ def _batch_fn(worker: int, idx: int):
 
 def _run(workers: int, pushes: int, schedule: Optional[object],
          workers_per_shard: int) -> Dict:
+    import time
+
+    from repro.core import schedule_topology
     from repro.fleet import FleetTrainer
     from repro.optim import sgd
     tr = FleetTrainer(
@@ -67,6 +70,15 @@ def _run(workers: int, pushes: int, schedule: Optional[object],
     q = [losses[max(0, int(len(losses) * f) - 1)]
          for f in (0.25, 0.5, 0.75, 1.0)]
     kinds = [e.kind for e in tr.membership_events]
+    stats = tr.planner_stats
+    sched_s = [e.scheduling_seconds for e in tr.replan_events]
+    # uncached probe: the same W-worker DP solved raw, without the
+    # planner — the "before" column for the homogeneous-fleet collapse
+    # (W identical workers cost W full DPs here vs one through the cache)
+    _, probe_costs = tr._worker_costs(tr._believed)
+    t0 = time.perf_counter()
+    schedule_topology(probe_costs, "dynacomm")
+    uncached_s = time.perf_counter() - t0
     return {
         "makespan_s": round(log.makespan, 4),
         "final_loss": round(losses[-1], 5),
@@ -81,6 +93,10 @@ def _run(workers: int, pushes: int, schedule: Optional[object],
         "fails": kinds.count("crash") + kinds.count("stall") +
         kinds.count("stall-evict"),
         "replans": len(tr.replan_events),
+        "sched_s_per_replan": round(sum(sched_s) / max(len(sched_s), 1), 6),
+        "uncached_sched_s": round(uncached_s, 6),
+        "plan_cache_hit_rate": round(stats["hit_rate"], 4),
+        "plan_cache_hits": stats["hits"],
         "reshards": sum(1 for e in tr.replan_events if e.resharded),
         "migrated_bytes": sum(e.migrated_bytes for e in tr.replan_events),
         "final_workers": tr.membership.num_active,

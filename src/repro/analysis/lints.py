@@ -81,7 +81,8 @@ class LintConfig:
     ``/``-normalized paths)."""
 
     deterministic_modules: Tuple[str, ...] = (
-        "core/simulator.py", "ps/async_mode.py", "ps/server.py",
+        "core/simulator.py", "core/scheduler.py", "core/planner.py",
+        "ps/async_mode.py", "ps/server.py",
         "fleet/engine.py", "fleet/membership.py", "fleet/drift.py",
         "fleet/trainer.py")
     kernel_dirs: Tuple[str, ...] = ("kernels",)

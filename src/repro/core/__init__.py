@@ -10,6 +10,7 @@ from repro.core.bruteforce import bruteforce_backward, bruteforce_forward
 from repro.core.scheduler import (STRATEGIES, Decision, DynaCommScheduler,
                                   TopologyScheduler, consensus_decision,
                                   evaluate, schedule, schedule_topology)
+from repro.core.planner import AsyncPlanner, Planner, PlannerStats, cost_key
 from repro.core.buckets import (BucketPlan, decision_from_plan,
                                 plan_from_decision)
 from repro.core.profiler import (EwmaDriftDetector, LayerProfile,
@@ -34,6 +35,7 @@ __all__ = [
     "bruteforce_forward", "bruteforce_backward",
     "STRATEGIES", "Decision", "DynaCommScheduler", "TopologyScheduler",
     "evaluate", "schedule", "schedule_topology", "consensus_decision",
+    "AsyncPlanner", "Planner", "PlannerStats", "cost_key",
     "BucketPlan", "plan_from_decision", "decision_from_plan",
     "EwmaDriftDetector", "LayerProfile", "LayerTimingHook",
     "costs_from_profiles", "measure_layer_costs", "random_costs",

@@ -22,12 +22,24 @@ stall-free from layer L downwards.
 Both run in O(L^3) time / O(L^2) space (paper Section IV-B4).  The inner
 minimization is vectorized with numpy so the Fig. 12 complexity benchmark is
 tractable at hundreds of layers.
+
+Warm re-planning (``repro.core.planner``): both DPs accept an
+``incumbent=`` upper bound — typically a previously-optimal decision's
+O(L) evaluation under the *new* costs — and prune the column sweep via a
+monotone per-column lower bound.  Pruned solves return *exactly* the
+same segments/time/num_transmissions as a full solve: the prune carries
+a small relative slack (``_PRUNE_SLACK``) because the incumbent's O(L)
+summation order differs from the DP's prefix-sum arithmetic by a few
+ULP, and slack only ever *adds* columns to the sweep — smallest-``n``
+argmin tie-breaks are preserved.  Only the untouched table columns stay
+at ``inf``.  ``fc_pref=``/``bc_pref=`` let a caller reuse compute-side
+prefix sums when only bandwidth/Δt scalars changed between plans.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -35,6 +47,14 @@ from repro.core.costmodel import (LayerCosts, Segment, backward_time,
                                   forward_time)
 
 _INF = np.inf
+
+#: relative slack on the incumbent prune: a feasible plan's O(L)
+#: evaluation can undershoot the DP's prefix-sum value of the *same*
+#: plan by a few ULP (different summation order), so a strict bound
+#: could prune the optimal column.  Slack never removes columns a full
+#: sweep would keep — it only computes extra ones — so pruned results
+#: stay exactly equal to full solves.
+_PRUNE_SLACK = 1e-9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,18 +80,36 @@ def _traceback(path: np.ndarray, L: int, n_star: int) -> Tuple[int, ...]:
     return tuple(reversed(bounds))
 
 
-def dp_forward(costs: LayerCosts) -> DPResult:
-    """Algorithm 3 — optimal parameter-transmission segmentation."""
+def dp_forward(costs: LayerCosts, *, incumbent: Optional[float] = None,
+               fc_pref: Optional[np.ndarray] = None) -> DPResult:
+    """Algorithm 3 — optimal parameter-transmission segmentation.
+
+    ``incumbent`` is an upper bound on the optimum (any feasible
+    segmentation's ``forward_time``); columns whose lower bound strictly
+    exceeds the best value seen are skipped.  ``fc_pref`` reuses a
+    precomputed compute prefix-sum vector (length L+1, leading 0)."""
     L = costs.num_layers
     pt_pref = np.concatenate([[0.0], np.cumsum(costs.pt)])   # Σ pt_{1..m}
-    fc_pref = np.concatenate([[0.0], np.cumsum(costs.fc)])   # Σ fc_{1..m}
+    if fc_pref is None:
+        fc_pref = np.concatenate([[0.0], np.cumsum(costs.fc)])  # Σ fc_{1..m}
 
     F = np.full((L + 1, L + 1), _INF)
     path = np.full((L + 1, L + 1), -1, dtype=np.int64)
     F[0, 0] = 0.0
 
+    # best value of F[L, ·] seen so far; the incumbent seeds the pruning
+    best = _INF if incumbent is None else float(incumbent)
     ms = np.arange(L + 1)
     for n in range(1, L + 1):
+        # Every n-column value at m = L pays all n serialized
+        # transmissions plus at least the last layer's compute after the
+        # last one: lb is monotone increasing in n, so once it clears
+        # the best finished value (plus FP slack) no later column can
+        # win, and the smallest-n argmin tie-break stays identical to a
+        # full sweep.
+        lb = n * costs.dt + pt_pref[L] + float(costs.fc[-1])
+        if lb > best + _PRUNE_SLACK * max(1.0, abs(best)):
+            break
         prev = F[:, n - 1]                       # F[k][n-1], k = 0..L
         # arrive[m]: when the n-th transmission (ending at layer m) completes
         arrive = n * costs.dt + pt_pref
@@ -84,6 +122,7 @@ def dp_forward(costs: LayerCosts) -> DPResult:
         valid = ms >= n
         F[valid, n] = vals[valid]
         path[valid, n] = ks[valid]
+        best = min(best, float(F[L, n]))
 
     n_star = int(np.argmin(F[L, 1:]) + 1)
     t_star = float(F[L, n_star])
@@ -95,21 +134,34 @@ def dp_forward(costs: LayerCosts) -> DPResult:
                     num_transmissions=n_star)
 
 
-def dp_backward(costs: LayerCosts) -> DPResult:
-    """Algorithm 4 — optimal gradient-transmission segmentation."""
+def dp_backward(costs: LayerCosts, *, incumbent: Optional[float] = None,
+                bc_pref: Optional[np.ndarray] = None) -> DPResult:
+    """Algorithm 4 — optimal gradient-transmission segmentation.
+
+    ``incumbent``/``bc_pref`` as in :func:`dp_forward` (``bc_pref`` is
+    the prefix sum of the *reversed* backward compute costs)."""
     L = costs.num_layers
     # Reversed views: position j (1-indexed) = original layer L+1-j.
     bc_rev = costs.bc[::-1]
     gt_rev = costs.gt[::-1]
-    bc_pref = np.concatenate([[0.0], np.cumsum(bc_rev)])     # Σ bc last-m layers
+    if bc_pref is None:
+        bc_pref = np.concatenate([[0.0], np.cumsum(bc_rev)])  # Σ bc last-m
     gt_pref = np.concatenate([[0.0], np.cumsum(gt_rev)])     # Σ gt last-m layers
 
     B = np.full((L + 1, L + 1), _INF)
     path = np.full((L + 1, L + 1), -1, dtype=np.int64)
     B[0, 0] = 0.0
 
+    best = _INF if incumbent is None else float(incumbent)
     ms = np.arange(L + 1)
     for n in range(1, L + 1):
+        # By induction B[m][n] >= n*Δt + Σ gt_{1..m} (each of the n
+        # pushes pays its own Δt and the gt ranges tile [1, m]), so
+        # B[L][n] >= n*Δt + gt_pref[L] — monotone in n.  Same FP slack
+        # as the forward sweep.
+        lb = n * costs.dt_push + gt_pref[L]
+        if lb > best + _PRUNE_SLACK * max(1.0, abs(best)):
+            break
         prev = B[:, n - 1]
         ready = bc_pref                              # compute-done time per m
         # cand[m, k] = max(prev[k], ready[m]) + Δt + (gt_pref[m] - gt_pref[k])
@@ -121,6 +173,7 @@ def dp_backward(costs: LayerCosts) -> DPResult:
         valid = ms >= n
         B[valid, n] = vals[valid]
         path[valid, n] = ks[valid]
+        best = min(best, float(B[L, n]))
 
     n_star = int(np.argmin(B[L, 1:]) + 1)
     t_star = float(B[L, n_star])

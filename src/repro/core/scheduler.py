@@ -15,13 +15,22 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.core import baselines, bruteforce, dp, greedy
 from repro.core.costmodel import (LayerCosts, Segment, TopologyCosts,
                                   backward_time, forward_time, iteration_time)
 
 Decision = Tuple[Tuple[Segment, ...], Tuple[Segment, ...]]  # (forward, backward)
+
+
+def _default_clock() -> float:
+    """Wall clock used to *measure* scheduling overhead (Table I).  Both
+    schedulers take it as an injectable ``clock=`` field so deterministic
+    tests and resumed-vs-fresh runs can pin event timings.  Genuinely
+    measuring here, hence the lint exemption.
+    """
+    return time.perf_counter()  # noqa: DET-WALL-CLOCK
 
 
 def _seq(costs: LayerCosts) -> Decision:
@@ -103,10 +112,20 @@ def evaluate(costs: LayerCosts, decision: Decision) -> Dict[str, float]:
 
 @dataclasses.dataclass
 class DynaCommScheduler:
-    """Run-time scheduler with per-epoch decision caching (Section IV-C)."""
+    """Run-time scheduler with per-epoch decision caching (Section IV-C).
+
+    ``planner=`` plugs a :class:`repro.core.planner.Planner` (or
+    :class:`~repro.core.planner.AsyncPlanner`) in front of the strategy
+    call — re-plans then go through the content-keyed memo cache (and,
+    async, collect decisions pre-computed in the gt¹ idle window) while
+    returning bit-identical decisions.  ``clock=`` injects the overhead
+    stopwatch so tests and resumed runs can pin event timings.
+    """
 
     strategy: str = "dynacomm"
     reschedule_every: int = 195       # paper: once per epoch (CIFAR-10, bs 256)
+    planner: Optional[Any] = None     # duck-typed: .decide(costs, strategy)
+    clock: Callable[[], float] = _default_clock
 
     _decision: Decision | None = None
     _iter_seen: int = 0
@@ -123,9 +142,12 @@ class DynaCommScheduler:
     def decision_for_iteration(self, costs: LayerCosts) -> Decision:
         """Return the active decision, re-scheduling on the epoch boundary."""
         if self._decision is None or self._iter_seen % self.reschedule_every == 0:
-            t0 = time.perf_counter()
-            self._decision = schedule(costs, self.strategy)
-            self.last_scheduling_seconds = time.perf_counter() - t0
+            t0 = self.clock()
+            if self.planner is not None:
+                self._decision = self.planner.decide(costs, self.strategy)
+            else:
+                self._decision = schedule(costs, self.strategy)
+            self.last_scheduling_seconds = self.clock() - t0
         self._iter_seen += 1
         return self._decision
 
@@ -143,11 +165,17 @@ class DynaCommScheduler:
 
     def state_dict(self) -> Dict[str, object]:
         """Checkpointable loop state (decision in segment form)."""
-        return {"iter_seen": self._iter_seen,
+        return {"strategy": self.strategy,
+                "iter_seen": self._iter_seen,
                 "decision": self._decision,
                 "last_scheduling_seconds": self.last_scheduling_seconds}
 
     def load_state_dict(self, state: Dict[str, object]) -> None:
+        saved = state.get("strategy", self.strategy)  # legacy: no strategy
+        if saved != self.strategy:
+            raise ValueError(
+                f"checkpoint was written by a {saved!r}-strategy scheduler; "
+                f"this scheduler runs {self.strategy!r}")
         self._iter_seen = int(state["iter_seen"])
         d = state["decision"]
         self._decision = None if d is None else (
@@ -174,11 +202,18 @@ class TopologyScheduler:
 
     ``decision_for_iteration`` returns a ``Decision`` in consensus mode
     and a tuple of per-worker ``Decision``s in per-worker mode.
+
+    ``planner=``/``clock=`` as on :class:`DynaCommScheduler`.  The
+    planner seam is where the homogeneous-fleet collapse happens: W
+    workers with identical costs become one DP solve plus W−1 cache
+    hits instead of W independent O(L³) sweeps.
     """
 
     strategy: str = "dynacomm"
     reschedule_every: int = 195
     mode: str = "consensus"           # "consensus" | "per-worker"
+    planner: Optional[Any] = None     # duck-typed planner seam
+    clock: Callable[[], float] = _default_clock
 
     _decision: object = None
     _iter_seen: int = 0
@@ -200,13 +235,20 @@ class TopologyScheduler:
         """The active decision(s), re-scheduling on the epoch boundary."""
         if self._decision is None or \
                 self._iter_seen % self.reschedule_every == 0:
-            t0 = time.perf_counter()
+            t0 = self.clock()
             if self.mode == "consensus":
-                self._decision, self.last_makespan = \
-                    consensus_decision(topo, self.strategy)
+                if self.planner is not None:
+                    self._decision, self.last_makespan = \
+                        self.planner.consensus(topo, self.strategy)
+                else:
+                    self._decision, self.last_makespan = \
+                        consensus_decision(topo, self.strategy)
+            elif self.planner is not None:
+                self._decision = self.planner.decide_topology(
+                    topo, self.strategy)
             else:
                 self._decision = schedule_topology(topo, self.strategy)
-            self.last_scheduling_seconds = time.perf_counter() - t0
+            self.last_scheduling_seconds = self.clock() - t0
         self._iter_seen += 1
         return self._decision
 
@@ -229,13 +271,31 @@ class TopologyScheduler:
             else tuple(one(w) for w in d)
 
     def state_dict(self) -> Dict[str, object]:
-        """Checkpointable loop state (decision in segment form)."""
-        return {"iter_seen": self._iter_seen,
+        """Checkpointable loop state (decision in segment form).
+
+        ``mode`` and ``strategy`` are persisted so a restore into a
+        differently-configured scheduler fails loudly: ``_tuplize``
+        branches on ``self.mode``, so feeding a per-worker checkpoint to
+        a consensus scheduler would otherwise silently rebuild garbage
+        nested tuples."""
+        return {"mode": self.mode,
+                "strategy": self.strategy,
+                "iter_seen": self._iter_seen,
                 "decision": self._decision,
                 "last_scheduling_seconds": self.last_scheduling_seconds,
                 "last_makespan": self.last_makespan}
 
     def load_state_dict(self, state: Dict[str, object]) -> None:
+        saved_mode = state.get("mode", self.mode)     # legacy: no mode
+        if saved_mode != self.mode:
+            raise ValueError(
+                f"checkpoint was written by a {saved_mode!r}-mode scheduler; "
+                f"this scheduler runs mode {self.mode!r}")
+        saved = state.get("strategy", self.strategy)  # legacy: no strategy
+        if saved != self.strategy:
+            raise ValueError(
+                f"checkpoint was written by a {saved!r}-strategy scheduler; "
+                f"this scheduler runs {self.strategy!r}")
         self._iter_seen = int(state["iter_seen"])
         d = state["decision"]
         self._decision = None if d is None else self._tuplize(d)

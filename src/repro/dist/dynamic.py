@@ -40,6 +40,7 @@ from repro.configs.base import ArchConfig, InputShape
 from repro.core.buckets import plan_from_decision
 from repro.core.costmodel import LayerCosts
 from repro.core.netmodel import NetworkSchedule, as_schedule
+from repro.core.planner import AsyncPlanner, Planner
 from repro.core.profiler import LayerTimingHook, costs_from_profiles
 from repro.core.scheduler import Decision, DynaCommScheduler
 from repro.dist.zero import ZeroTrainer
@@ -95,6 +96,8 @@ class DynamicTrainer(ReplanMixin):
     zero3: bool = False
     axis_name: str = "data"
     aux_weight: float = 0.01
+    async_planning: bool = False  # pre-plan epoch e+1 in e's idle window
+    plan_cache_size: int = 256    # memoized decisions kept (LRU)
 
     def __post_init__(self):
         if self.steps_per_epoch < 1:
@@ -107,8 +110,11 @@ class DynamicTrainer(ReplanMixin):
             raise ValueError(f"remeasure_every must be >= 0, got "
                              f"{self.remeasure_every}")
         self.network: NetworkSchedule = as_schedule(self.network)
+        planner_cls = AsyncPlanner if self.async_planning else Planner
+        self.planner = planner_cls(cache_size=self.plan_cache_size)
         self.scheduler = DynaCommScheduler(strategy=self.strategy,
-                                           reschedule_every=self.steps_per_epoch)
+                                           reschedule_every=self.steps_per_epoch,
+                                           planner=self.planner)
         self.hook = LayerTimingHook(warmup=self.measure_warmup)
         Ls = model_lib.num_sched_layers(self.cfg)
         self.base = ZeroTrainer(cfg=self.cfg, mesh=self.mesh,
@@ -138,6 +144,11 @@ class DynamicTrainer(ReplanMixin):
     @property
     def epoch(self) -> int:
         return self._step_idx // self.steps_per_epoch
+
+    @property
+    def planner_stats(self) -> Dict[str, float]:
+        """Memo-cache / async-planning counters (``PlannerStats``)."""
+        return self.planner.stats.as_dict()
 
     def timeline(self):
         """Per-phase timeline of the active plan against the most recent
@@ -229,6 +240,17 @@ class DynamicTrainer(ReplanMixin):
                 step=i, epoch=i // self.steps_per_epoch, plan=plan,
                 prev=prev, retraced=retraced, scheduler=self.scheduler,
                 costs=self._costs, trigger="drift" if drift else "epoch")
+        if boundary and self.async_planning and \
+                self.cost_source == "analytic":
+            # Phase one of the async protocol: the analytic cost point of
+            # epoch e+1 is a pure function of the epoch, so its DP can run
+            # now, in this epoch's Δt + gt¹ idle window (Table I), and be
+            # collected at the next boundary.  Measured costs aren't
+            # predictable ahead of time — they solve inline (the planner's
+            # sync fallback) exactly as before.
+            nxt = i // self.steps_per_epoch + 1
+            self.planner.submit(self.costs_for_epoch(nxt, state, batch),
+                                self.strategy)
 
     def step(self, state, batch):
         """One training step; re-plans on epoch boundaries — and, when a

@@ -62,6 +62,7 @@ import numpy as np
 from repro.core.buckets import BucketPlan, decision_from_plan, \
     plan_from_decision
 from repro.core.costmodel import iteration_time
+from repro.core.planner import AsyncPlanner, Planner
 from repro.core.scheduler import TopologyScheduler
 from repro.dist.collectives import FlatSpec, flatten_tree, make_flat_spec, \
     unflatten_tree
@@ -194,7 +195,8 @@ class FleetTrainer:
                  profiles: Optional[Sequence[Any]] = None,
                  compressor=None,
                  drift_detector: Optional[FleetDriftDetector] = None,
-                 stall_factor: float = 4.0, check_interval: float = 0.0):
+                 stall_factor: float = 4.0, check_interval: float = 0.0,
+                 async_planning: bool = False, plan_cache_size: int = 256):
         init_layers = list(init_layers)
         if not init_layers:
             raise ValueError("need at least one layer tree")
@@ -236,9 +238,20 @@ class FleetTrainer:
             self._compress_fn = jax.jit(compressor.roundtrip)
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
         self.detector = drift_detector or FleetDriftDetector()
+        # The memo cache is what makes fleet-scale re-planning viable: a
+        # homogeneous roster's W identical per-worker DPs collapse to one
+        # solve + W−1 content-key hits, and re-plans after churn re-use
+        # every unchanged worker's decision.  async_planning additionally
+        # pre-solves the next scripted membership change's roster in the
+        # background (see _speculate_next_replan).
+        self.async_planning = async_planning
+        planner_cls = AsyncPlanner if async_planning else Planner
+        self.planner = planner_cls(cache_size=plan_cache_size)
         self.scheduler = TopologyScheduler(strategy=strategy,
                                            reschedule_every=1,
-                                           mode="per-worker")
+                                           mode="per-worker",
+                                           planner=self.planner)
+        self._next_fleet_event = 0       # index into schedule.events
         self.membership = FleetMembership(self._init_specs)
         topo0 = self.membership.topology(
             self._servers_for(self.membership.num_active))
@@ -322,6 +335,36 @@ class FleetTrainer:
             scheduling_seconds=self.scheduler.last_scheduling_seconds,
             overhead_hidden=self.scheduler.scheduling_overhead_hidden(
                 costs)))
+        if self.async_planning:
+            self._speculate_next_replan()
+
+    def _speculate_next_replan(self) -> None:
+        """Phase one of the async protocol: project the roster the *next*
+        scripted membership change will leave behind and pre-solve its
+        per-worker DPs in the background, so the re-plan at that event is
+        a collect instead of an inline O(W·L³) sweep.  Unscripted
+        re-plans (stall evictions, drift detections) and mispredictions
+        simply fall back to the planner's inline solve — speculation
+        never changes a decision, only where it was computed."""
+        specs = {w: self.membership.spec(w) for w in self.membership.active}
+        for fev in self.schedule.events[self._next_fleet_event:]:
+            if fev.kind == "join":
+                specs[fev.worker] = fev.spec or WorkerSpec()
+            elif fev.kind == "leave" or \
+                    (fev.kind == "fail" and fev.mode == "crash"):
+                specs.pop(fev.worker, None)
+            else:
+                continue         # stalls/drifts don't re-plan on arrival
+            break
+        else:
+            return               # no further scripted membership change
+        if not specs:
+            return
+        topo = FleetMembership(specs).topology(
+            self._servers_for(len(specs)), flops_scale=self._believed)
+        self.planner.submit_topology(
+            topo.topology_costs(self._profiles, compressor=self.compressor),
+            self.scheduler.strategy)
 
     def _recompute_true_durations(self) -> None:
         """What an iteration *actually* takes per worker — the believed
@@ -440,6 +483,10 @@ class FleetTrainer:
             if kind == "commit":
                 self._on_commit(loop, ev, target, batch_fn)
             elif kind == "fleet":
+                # bookmark for the speculative pre-solve: the next
+                # scripted event after this one is what a re-plan here
+                # should pre-compute for
+                self._next_fleet_event = ev.payload[1] + 1
                 self._apply_fleet_event(
                     loop, self.schedule.events[ev.payload[1]], ev.time,
                     target, batch_fn)
@@ -457,6 +504,7 @@ class FleetTrainer:
         self._true_factor, self._believed = {}, {}
         self._push_history = {}
         self.replan_events, self.membership_events = [], []
+        self._next_fleet_event = 0
         loop = _FleetLoop(log=AsyncRunLog(),
                           parked=list(self.membership.active))
         loop.attempts = {w: 0 for w in loop.parked}
@@ -653,6 +701,11 @@ class FleetTrainer:
     def log(self) -> Optional[AsyncRunLog]:
         return self._loop.log if self._loop is not None else None
 
+    @property
+    def planner_stats(self) -> Dict[str, float]:
+        """Memo-cache / async-planning counters (``PlannerStats``)."""
+        return self.planner.stats.as_dict()
+
     def layer_params(self) -> List[Any]:
         """Head-version parameters, unflattened to the layer pytrees."""
         return [unflatten_tree(f, s)
@@ -688,6 +741,7 @@ class FleetTrainer:
             "membership": self.membership.state_dict(),
             "detector": self.detector.state_dict(),
             "scheduler": self.scheduler.state_dict(),
+            "next_fleet_event": self._next_fleet_event,
             "num_servers": self._num_servers,
             "plans": {str(w): _plan_to_lists(p)
                       for w, p in self._plans.items()},
@@ -755,6 +809,7 @@ class FleetTrainer:
         self._true_factor = {int(w): f
                              for w, f in meta["true_factor"].items()}
         self._believed = {int(w): f for w, f in meta["believed"].items()}
+        self._next_fleet_event = int(meta.get("next_fleet_event", 0))
         self._num_servers = int(meta["num_servers"])
         self._plans = {int(w): _plan_from_lists(p)
                        for w, p in meta["plans"].items()}

@@ -109,6 +109,8 @@ def config_from_flags(args) -> RuntimeConfig:
             strategy=args.strategy,
             reschedule_every=args.steps_per_epoch,
             drift_detect=args.drift_detect,
+            async_planning=args.async_planning,
+            plan_cache_size=args.plan_cache_size,
             network=network, topology=topology),
         execution=ExecutionConfig(
             staleness=args.staleness, throttle=args.throttle,
@@ -193,6 +195,14 @@ def main() -> None:
     ap.add_argument("--bw-shift-gbps", type=float, default=None,
                     help="drift the uplink to this bandwidth at --shift-epoch")
     ap.add_argument("--shift-epoch", type=int, default=1)
+    ap.add_argument("--async-planning", action="store_true",
+                    help="pre-plan epoch e+1's decision during epoch e "
+                         "(the paper's gt¹ idle window); decisions stay "
+                         "bit-identical, only where they are computed "
+                         "moves")
+    ap.add_argument("--plan-cache-size", type=int, default=256,
+                    help="memoized (strategy, costs) -> decision entries "
+                         "kept by the planner (LRU)")
     ap.add_argument("--cost-source", choices=("analytic", "measured"),
                     default="analytic")
     ap.add_argument("--drift-detect", action="store_true",

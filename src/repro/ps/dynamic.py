@@ -48,6 +48,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.buckets import BucketPlan, plan_from_decision
 from repro.core.costmodel import TopologyCosts
+from repro.core.planner import AsyncPlanner, Planner
 from repro.core.profiler import LayerProfile, LayerTimingHook
 from repro.core.scheduler import TopologyScheduler
 from repro.models import model as model_lib
@@ -122,6 +123,8 @@ class DynamicPSTrainer(ReplanMixin):
     axis_name: str = "data"
     aux_weight: float = 0.01
     compressor: Optional[Any] = None
+    async_planning: bool = False  # pre-plan epoch e+1 in e's idle window
+    plan_cache_size: int = 256    # memoized decisions kept (LRU)
 
     def __post_init__(self):
         if self.steps_per_epoch < 1:
@@ -134,9 +137,11 @@ class DynamicPSTrainer(ReplanMixin):
             raise ValueError(f"remeasure_every must be >= 0, got "
                              f"{self.remeasure_every}")
         self.topology: TopologySchedule = as_topology_schedule(self.topology)
+        planner_cls = AsyncPlanner if self.async_planning else Planner
+        self.planner = planner_cls(cache_size=self.plan_cache_size)
         self.scheduler = TopologyScheduler(
             strategy=self.strategy, reschedule_every=self.steps_per_epoch,
-            mode="consensus")
+            mode="consensus", planner=self.planner)
         self.hook = LayerTimingHook(warmup=self.measure_warmup)
         self._profiles = layer_profiles(self.cfg, self.input_shape)
         Ls = model_lib.num_sched_layers(self.cfg)
@@ -169,6 +174,11 @@ class DynamicPSTrainer(ReplanMixin):
     @property
     def epoch(self) -> int:
         return self._step_idx // self.steps_per_epoch
+
+    @property
+    def planner_stats(self) -> Dict[str, float]:
+        """Memo-cache / async-planning counters (``PlannerStats``)."""
+        return self.planner.stats.as_dict()
 
     def costs_for_epoch(self, epoch: int, state=None, batch=None, *,
                         remeasure: bool = False) -> TopologyCosts:
@@ -258,6 +268,16 @@ class DynamicPSTrainer(ReplanMixin):
                 step=i, epoch=i // self.steps_per_epoch, plan=plan,
                 prev=prev, retraced=retraced, scheduler=self.scheduler,
                 costs=self._costs)
+        if boundary and self.async_planning and \
+                self.cost_source == "analytic":
+            # Phase one of the async protocol: epoch e+1's analytic
+            # topology projection is a pure function of the epoch, so its
+            # per-worker DPs can run now in the Δt + gt¹ idle window and
+            # be collected at the next boundary.  Measured costs solve
+            # inline as before (the planner's sync fallback).
+            self.planner.submit_topology(
+                self.costs_for_epoch(i // self.steps_per_epoch + 1),
+                self.strategy)
 
     def step(self, state, batch):
         """One training step; re-plans on topology-epoch boundaries.
@@ -322,15 +342,22 @@ class DynamicAsyncPSTrainer:
                  throttle: str = "reject", aggregate: bool = False,
                  strategy: str = "dynacomm",
                  profiles: Optional[Sequence[LayerProfile]] = None,
-                 compressor: Optional[Any] = None):
+                 compressor: Optional[Any] = None,
+                 async_planning: bool = False,
+                 plan_cache_size: int = 256):
         if pushes_per_epoch < 1:
             raise ValueError(f"pushes_per_epoch must be >= 1, got "
                              f"{pushes_per_epoch}")
         self.topology: TopologySchedule = as_topology_schedule(topology)
         self.pushes_per_epoch = pushes_per_epoch
+        self.strategy = strategy
+        self.async_planning = async_planning
+        planner_cls = AsyncPlanner if async_planning else Planner
+        self.planner = planner_cls(cache_size=plan_cache_size)
         self.scheduler = TopologyScheduler(strategy=strategy,
                                            reschedule_every=1,
-                                           mode="per-worker")
+                                           mode="per-worker",
+                                           planner=self.planner)
         self.events: List[AsyncRescheduleEvent] = []
         self._planned_epoch = 0
         # plan epoch 0 before building the trainer (it needs plans)
@@ -363,6 +390,11 @@ class DynamicAsyncPSTrainer:
     def worker_plans(self) -> Tuple[BucketPlan, ...]:
         return self._worker_plans
 
+    @property
+    def planner_stats(self) -> Dict[str, float]:
+        """Memo-cache / async-planning counters (``PlannerStats``)."""
+        return self.planner.stats.as_dict()
+
     def costs_for_epoch(self, epoch: int) -> TopologyCosts:
         return self.topology.topology_at(epoch).topology_costs(
             self._profiles, compressor=self.compressor)
@@ -385,6 +417,12 @@ class DynamicAsyncPSTrainer:
             scheduling_seconds=self.scheduler.last_scheduling_seconds,
             overhead_hidden=self.scheduler.scheduling_overhead_hidden(
                 costs)))
+        if self.async_planning:
+            # phase one: the async-PS cost projection is always analytic
+            # (a pure function of the epoch), so epoch e+1's per-worker
+            # DPs can run in this epoch's idle window
+            self.planner.submit_topology(self.costs_for_epoch(epoch + 1),
+                                         self.strategy)
 
     def run(self, num_epochs: int,
             batch_fn: Callable[[int, int], Any]) -> AsyncRunLog:

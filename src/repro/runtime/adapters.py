@@ -316,7 +316,9 @@ class DynamicRuntime(_CompiledRuntime):
             measure_warmup=config.measure.measure_warmup,
             remeasure_every=config.measure.remeasure_every,
             drift_detector=detector, zero3=config.execution.zero3,
-            aux_weight=config.aux_weight)
+            aux_weight=config.aux_weight,
+            async_planning=config.schedule.async_planning,
+            plan_cache_size=config.schedule.plan_cache_size)
         self._state = self.trainer.init_state(
             jax.random.PRNGKey(config.seed))
 
@@ -410,7 +412,9 @@ class DynamicPSRuntime(_PSBase):
             cost_source=config.measure.cost_source,
             remeasure_every=config.measure.remeasure_every,
             measure_iters=config.measure.measure_iters,
-            measure_warmup=config.measure.measure_warmup)
+            measure_warmup=config.measure.measure_warmup,
+            async_planning=config.schedule.async_planning,
+            plan_cache_size=config.schedule.plan_cache_size)
         self._state = self.trainer.init_state(
             jax.random.PRNGKey(config.seed))
 
@@ -624,7 +628,9 @@ class DynamicPSAsyncRuntime(_AsyncBase):
             aggregate=config.execution.aggregate,
             strategy=config.schedule.strategy,
             profiles=layer_profiles(arch, self.shape),
-            compressor=config.compression.build())
+            compressor=config.compression.build(),
+            async_planning=config.schedule.async_planning,
+            plan_cache_size=config.schedule.plan_cache_size)
 
     @property
     def events(self):
@@ -681,7 +687,9 @@ class FleetRuntime(_AsyncBase):
             compressor=config.compression.build(),
             drift_detector=fleet_cfg.build_detector(),
             stall_factor=fleet_cfg.stall_factor,
-            check_interval=fleet_cfg.check_interval)
+            check_interval=fleet_cfg.check_interval,
+            async_planning=config.schedule.async_planning,
+            plan_cache_size=config.schedule.plan_cache_size)
 
     @property
     def events(self):

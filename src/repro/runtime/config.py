@@ -151,6 +151,8 @@ class ScheduleConfig:
     strategy: str = "dynacomm"
     reschedule_every: int = 20       # steps (sync) / pushes (async) per epoch
     drift_detect: bool = False       # dynamic runtime: EWMA step-time drift
+    async_planning: bool = False     # pre-plan epoch e+1 in e's idle window
+    plan_cache_size: int = 256       # memoized decisions kept (LRU)
     network: Optional[NetworkConfig] = None
     topology: Optional[TopologyConfig] = None
 
@@ -161,6 +163,9 @@ class ScheduleConfig:
         if self.reschedule_every < 1:
             raise ValueError(f"reschedule_every must be >= 1, got "
                              f"{self.reschedule_every}")
+        if self.plan_cache_size < 1:
+            raise ValueError(f"plan_cache_size must be >= 1, got "
+                             f"{self.plan_cache_size}")
         if self.network is not None and self.topology is not None:
             raise ValueError("give either a network (ZeRO regimes) or a "
                              "topology (PS regimes), not both")

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -62,13 +63,31 @@ class RescheduleEvent:
     trigger: str = "epoch"        # "epoch" boundary | "drift" detector
 
 
-class PlanStepCache:
-    """``BucketPlan``-keyed AOT compiled-step cache (see module docstring)."""
+#: compiled HLO dumps retained per cache — comfortably above the plan
+#: count any smoke config or ``repro.analysis verify`` pass touches, so
+#: every live plan stays auditable, while fleet churn (per-worker plans
+#: multiplying across membership changes) can no longer grow text dumps
+#: without bound.  Compiled steps and collective *counts* are small and
+#: stay unbounded: evicting a step would force a retrace.
+DEFAULT_HLO_RETENTION = 16
 
-    def __init__(self):
+
+class PlanStepCache:
+    """``BucketPlan``-keyed AOT compiled-step cache (see module docstring).
+
+    ``hlo_retention`` bounds how many full HLO text dumps are kept
+    (keep-last-N by compile order); ``hlo_evictions`` counts dumps
+    dropped over the bound."""
+
+    def __init__(self, *, hlo_retention: int = DEFAULT_HLO_RETENTION):
+        if hlo_retention < 1:
+            raise ValueError(
+                f"hlo_retention must be >= 1, got {hlo_retention}")
         self._steps: Dict[BucketPlan, Callable] = {}
         self._hlo: Dict[BucketPlan, Tuple[int, int]] = {}
-        self._hlo_text: Dict[BucketPlan, str] = {}
+        self._hlo_text: "OrderedDict[BucketPlan, str]" = OrderedDict()
+        self.hlo_retention = hlo_retention
+        self.hlo_evictions = 0         # HLO dumps dropped over the bound
         self.traces = 0                # compile-cache misses
         self.hits = 0                  # plan *swaps* served from the cache
 
@@ -84,9 +103,12 @@ class PlanStepCache:
 
     def hlo_text(self, plan: BucketPlan) -> str:
         """The compiled HLO dump of a cached plan's step (kept so the
-        conformance pass can audit every plan without recompiling)."""
+        conformance pass can audit every plan without recompiling;
+        only the last ``hlo_retention`` compiles are retained)."""
         if plan not in self._hlo_text:
-            raise KeyError(f"plan {plan} has no compiled step yet")
+            raise KeyError(f"plan {plan} has no retained HLO dump "
+                           f"(never compiled, or evicted past the "
+                           f"keep-last-{self.hlo_retention} bound)")
         return self._hlo_text[plan]
 
     def step_for(self, plan: BucketPlan, build_step: Callable[[], Callable],
@@ -104,6 +126,9 @@ class PlanStepCache:
         text = compiled.as_text()
         self._hlo[plan] = hlo_collective_counts(text)
         self._hlo_text[plan] = text
+        while len(self._hlo_text) > self.hlo_retention:
+            self._hlo_text.popitem(last=False)
+            self.hlo_evictions += 1
         self._steps[plan] = compiled
         return compiled, True
 
@@ -118,9 +143,10 @@ class ReplanMixin:
     its last DP wall time against the costs' Δt + gt¹ idle window).
     """
 
-    def _init_replan(self) -> None:
+    def _init_replan(self, *, hlo_retention: int = DEFAULT_HLO_RETENTION
+                     ) -> None:
         self.events: List[RescheduleEvent] = []
-        self._cache = PlanStepCache()
+        self._cache = PlanStepCache(hlo_retention=hlo_retention)
         self._plan: Optional[BucketPlan] = None
         self._step_fn: Optional[Callable] = None
 
@@ -144,6 +170,11 @@ class ReplanMixin:
     def cache_hits(self) -> int:
         """Plan swaps served from the compiled-step cache."""
         return self._cache.hits
+
+    @property
+    def hlo_evictions(self) -> int:
+        """HLO text dumps dropped past the keep-last-N retention bound."""
+        return self._cache.hlo_evictions
 
     def hlo_counts(self, plan: Optional[BucketPlan] = None) -> Tuple[int, int]:
         """(#all-gathers, #reduce-scatters) of a cached plan's compiled

@@ -595,6 +595,7 @@ class TestCompressionConfig:
             runtime="ps", staleness=1, arch="granite-3-2b", reduced=True,
             batch=4, seq=16, optimizer="adamw", lr=3e-4,
             strategy="dynacomm", steps_per_epoch=20, drift_detect=False,
+            async_planning=False, plan_cache_size=256,
             bw_gbps=10.0, bw_shift_gbps=None, shift_epoch=1,
             cost_source="analytic", ps_servers=2, ps_workers=3,
             down_gbps=10.0, up_gbps=1.0, up_shift_gbps=None,
