@@ -35,11 +35,15 @@ def main() -> None:
     from benchmarks.compression import COMPRESSION_BENCHES
     from benchmarks.fleet_churn import FLEET_BENCHES
     from benchmarks.paper_figures import ALL_BENCHES
+    from benchmarks.pipeline_overlap import PIPELINE_BENCHES
     from benchmarks.ps_scenarios import PS_BENCHES
+    from benchmarks.runtime_matrix import MATRIX_BENCHES
     benches = dict(ALL_BENCHES)
     benches.update(PS_BENCHES)
     benches.update(COMPRESSION_BENCHES)
     benches.update(FLEET_BENCHES)
+    benches.update(PIPELINE_BENCHES)
+    benches.update(MATRIX_BENCHES)
 
     if not args.skip_roofline:
         from benchmarks.roofline_report import roofline_rows

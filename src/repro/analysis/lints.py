@@ -84,7 +84,9 @@ class LintConfig:
         "core/simulator.py", "core/scheduler.py", "core/planner.py",
         "ps/async_mode.py", "ps/server.py",
         "fleet/engine.py", "fleet/membership.py", "fleet/drift.py",
-        "fleet/trainer.py")
+        "fleet/trainer.py",
+        "pipeline/partition.py", "pipeline/schedule.py",
+        "pipeline/transfer.py", "pipeline/trainer.py")
     kernel_dirs: Tuple[str, ...] = ("kernels",)
 
 

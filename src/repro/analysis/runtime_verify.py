@@ -57,6 +57,8 @@ def verify_runtime(config: Any, *, steps: Optional[int] = None
         return _verify_async(rt, config, regime, steps)
     if regime == "fleet-async":
         return _verify_fleet(rt, config, steps)
+    if regime == "pipeline":
+        return _verify_pipeline(rt, config, steps)
     raise ValueError(f"no conformance driver for runtime {regime!r}")
 
 
@@ -172,6 +174,76 @@ def _verify_async(rt: Any, config: Any, regime: str, steps: Optional[int]
         compression=getattr(compressor, "scheme", "none")
         if compressor else "none",
         checked=["no-collectives", "wire-model", "push-ledger"])
+
+
+def _verify_pipeline(rt: Any, config: Any, steps: Optional[int]
+                     ) -> Tuple[List[Finding], Dict[str, Any]]:
+    tr = rt.trainer
+    n = steps if steps is not None else 1
+    rt.fit(n)
+
+    # each per-stage program must be collective-free: inter-stage bytes
+    # move only through the explicit boundary buffers the ledger accounts
+    findings: List[Finding] = []
+    batch = rt._batch_fn(0)
+    for s, (fwd_hlo, bwd_hlo) in enumerate(tr.stage_hlo(batch)):
+        findings.extend(verify_no_collectives(
+            fwd_hlo, context=f"pipeline stage {s} forward"))
+        findings.extend(verify_no_collectives(
+            bwd_hlo, context=f"pipeline stage {s} backward"))
+
+    # ledger audit: boundary bytes must equal the independent byte model
+    # (per step: M activation flats down + M grad flats up per boundary,
+    # plus the tied-embedding flat to/from the head stage)
+    S, M = tr.num_stages, tr.num_microbatches
+    act = tr.activation_bytes()
+    embed_bytes = tr.specs[0].total * 4 if S > 1 else 0
+    expected_pull = n * (M * sum(act) + embed_bytes)
+    expected_push = n * (M * sum(act) + M * embed_bytes)
+    led = rt.ledger
+    for direction, expected in (("pull", expected_pull),
+                                ("push", expected_push)):
+        recorded = led[f"{direction}_bytes"]
+        if recorded != expected:
+            findings.append(Finding(
+                code="PIPE-LEDGER",
+                message=f"pipeline ledger records {recorded} {direction} "
+                        f"bytes over {n} step(s); the boundary byte model "
+                        f"gives {expected}",
+                detail={"recorded": recorded, "expected": expected,
+                        "steps": n, "stages": S, "microbatches": M}))
+
+    # partition sanity + transfer-plan optimality vs the whole-tensor
+    # baseline (the DP can never lose to a feasible decision)
+    part = tr.partition
+    if abs(max(part.loads) - part.bottleneck) > 1e-9 * max(part.bottleneck,
+                                                           1.0):
+        findings.append(Finding(
+            code="PIPE-PARTITION",
+            message=f"partition bottleneck {part.bottleneck} is not the "
+                    f"max stage load {max(part.loads)}",
+            detail=part.as_dict()))
+    plans = tr.transfer_plans() or []
+    for p in plans:
+        if p.fwd_time > p.whole_fwd_time + 1e-12 or \
+                p.bwd_time > p.whole_bwd_time + 1e-12:
+            findings.append(Finding(
+                code="PIPE-TRANSFER",
+                message=f"boundary {p.boundary}: segmented transfer "
+                        f"({p.fwd_time + p.bwd_time:.6f}s) loses to the "
+                        f"whole-tensor baseline "
+                        f"({p.whole_fwd_time + p.whole_bwd_time:.6f}s)",
+                detail={"boundary": p.boundary,
+                        "segmented": p.fwd_time + p.bwd_time,
+                        "whole": p.whole_fwd_time + p.whole_bwd_time}))
+    timeline = tr.timeline()
+    return findings, _info(
+        "pipeline", steps_run=n, stages=S, microbatches=M,
+        schedule=tr.schedule_name, partition=part.as_dict(),
+        boundary_speedups=[p.speedup for p in plans],
+        bubble_fraction=(timeline.bubble_fraction
+                         if timeline is not None else None),
+        checked=["no-collectives", "ledger", "partition", "transfer-plans"])
 
 
 def _verify_fleet(rt: Any, config: Any, steps: Optional[int]

@@ -2,7 +2,8 @@
 
 from repro.core.costmodel import (LayerCosts, Segment, TopologyCosts,
                                   backward_time, forward_time, iteration_time)
-from repro.core.dp import DPResult, dp_backward, dp_forward, dynacomm_schedule
+from repro.core.dp import (DPResult, PartitionResult, dp_backward, dp_forward,
+                           dp_partition, dynacomm_schedule)
 from repro.core.greedy import ibatch_backward, ibatch_forward, ibatch_schedule
 from repro.core.baselines import (lbl_backward, lbl_forward,
                                   sequential_backward, sequential_forward)
@@ -29,7 +30,8 @@ from repro.core.simulator import (IterationTimeline, PSReplanTimeline,
 __all__ = [
     "LayerCosts", "Segment", "TopologyCosts",
     "forward_time", "backward_time", "iteration_time",
-    "DPResult", "dp_forward", "dp_backward", "dynacomm_schedule",
+    "DPResult", "PartitionResult", "dp_forward", "dp_backward",
+    "dp_partition", "dynacomm_schedule",
     "ibatch_forward", "ibatch_backward", "ibatch_schedule",
     "lbl_forward", "lbl_backward", "sequential_forward", "sequential_backward",
     "bruteforce_forward", "bruteforce_backward",

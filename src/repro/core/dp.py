@@ -193,3 +193,62 @@ def dynacomm_schedule(costs: LayerCosts):
     f = dp_forward(costs)
     b = dp_backward(costs)
     return (f.segments, b.segments), f.time + b.time
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionResult:
+    """Optimal contiguous min-max partition (pipeline stage split)."""
+
+    segments: Tuple[Segment, ...]   # 1-indexed inclusive, tiles 1..L
+    bottleneck: float               # max per-segment load (the objective)
+    table: np.ndarray               # P, shape (L+1, S+1)
+
+
+def dp_partition(loads, num_parts: int) -> PartitionResult:
+    """Split ``loads`` into ``num_parts`` contiguous pieces minimizing the
+    maximum piece sum (the pipeline *bottleneck stage*).
+
+    The Bellman recurrence mirrors the transmission DPs above, with
+    ``max`` replacing the comm/compute coupling::
+
+        P[m][s] = min_{s-1<=k<m} max(P[k][s-1], Σ_{k+1<=l<=m} load_l)
+
+    O(S·L²) time via the same vectorized candidate matrix; ties break to
+    the smallest split point ``k`` (``np.argmin`` keeps the first
+    minimum), so results are deterministic.  Every piece is non-empty:
+    ``1 <= num_parts <= len(loads)`` is required.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    if loads.ndim != 1 or loads.size == 0:
+        raise ValueError("loads must be a non-empty 1-D array")
+    if np.any(loads < 0):
+        raise ValueError("loads must be non-negative")
+    L = int(loads.size)
+    S = int(num_parts)
+    if not 1 <= S <= L:
+        raise ValueError(f"num_parts must be in [1, {L}], got {num_parts}")
+
+    pref = np.concatenate([[0.0], np.cumsum(loads)])
+    P = np.full((L + 1, S + 1), _INF)
+    path = np.full((L + 1, S + 1), -1, dtype=np.int64)
+    P[0, 0] = 0.0
+
+    ms = np.arange(L + 1)
+    for s in range(1, S + 1):
+        prev = P[:, s - 1]                       # P[k][s-1], k = 0..L
+        # cand[m, k] = max(prev[k], pref[m] - pref[k])
+        cand = np.maximum(prev[None, :], pref[:, None] - pref[None, :])
+        cand[ms[:, None] <= ms[None, :]] = _INF  # require k < m
+        ks = np.argmin(cand, axis=1)
+        vals = cand[ms, ks]
+        valid = ms >= s
+        P[valid, s] = vals[valid]
+        path[valid, s] = ks[valid]
+
+    t_star = float(P[L, S])
+    bounds = _traceback(path, L, S)
+    segments = tuple((bounds[i] + 1, bounds[i + 1])
+                     for i in range(len(bounds) - 1))
+    sums = tuple(float(pref[hi] - pref[lo - 1]) for lo, hi in segments)
+    assert abs(max(sums) - t_star) <= 1e-9 * max(1.0, t_star)
+    return PartitionResult(segments=segments, bottleneck=t_star, table=P)

@@ -74,6 +74,35 @@ def _compute_key(costs: LayerCosts) -> Tuple:
     return (costs.fc.tobytes(), costs.bc.tobytes())
 
 
+def _key_to_json(x):
+    """Recursively JSON-encode a cache key: raw cost bytes become hex
+    (``{"b": ...}``), nested tuples become ``{"t": [...]}`` — strings,
+    floats, and None pass through.  ``json`` float text is the shortest
+    round-tripping repr, so keys decode byte-exact."""
+    if isinstance(x, bytes):
+        return {"b": x.hex()}
+    if isinstance(x, tuple):
+        return {"t": [_key_to_json(v) for v in x]}
+    return x
+
+
+def _key_from_json(x):
+    if isinstance(x, dict):
+        if "b" in x:
+            return bytes.fromhex(x["b"])
+        return tuple(_key_from_json(v) for v in x["t"])
+    return x
+
+
+def _decision_to_json(decision: Decision):
+    return [[list(seg) for seg in side] for side in decision]
+
+
+def _decision_from_json(obj) -> Decision:
+    return tuple(tuple(tuple(int(v) for v in seg) for seg in side)
+                 for side in obj)
+
+
 @dataclasses.dataclass
 class _WarmEntry:
     """A cached solve reusable as a warm start for same-compute costs."""
@@ -258,6 +287,50 @@ class Planner:
 
     def __len__(self) -> int:
         return len(self._decisions)
+
+    # -- persistence ----------------------------------------------------
+
+    def state_dict(self) -> Dict:
+        """JSON-serializable snapshot of every cache (not the counters).
+
+        Content keys hold raw cost bytes; they travel as hex so the
+        snapshot survives ``json.dumps`` inside the loop-state metadata.
+        A restored planner serves the same hits a warm one would — a
+        resumed run's first re-plan at an already-seen cost point is a
+        cache hit, not a fresh solve (tested)."""
+        with self._lock:
+            return {
+                "cache_size": self.cache_size,
+                "decisions": [[_key_to_json(k), _decision_to_json(d)]
+                              for k, d in self._decisions.items()],
+                "warm": [[_key_to_json(k),
+                          {"decision": _decision_to_json(w.decision),
+                           "fc_pref": [float(v) for v in w.fc_pref],
+                           "bc_pref": [float(v) for v in w.bc_pref]}]
+                         for k, w in self._warm.items()],
+                "consensus": [[_key_to_json(k),
+                               [_decision_to_json(d), float(mk)]]
+                              for k, (d, mk) in self._consensus.items()],
+            }
+
+    def load_state_dict(self, state: Dict) -> None:
+        """Restore the caches from :meth:`state_dict` (insertion order —
+        and thus LRU order — preserved; counters start fresh)."""
+        with self._lock:
+            self._decisions.clear()
+            self._warm.clear()
+            self._consensus.clear()
+            for k, d in state.get("decisions", ()):
+                self._decisions[_key_from_json(k)] = _decision_from_json(d)
+            for k, w in state.get("warm", ()):
+                self._warm[_key_from_json(k)] = _WarmEntry(
+                    decision=_decision_from_json(w["decision"]),
+                    fc_pref=np.asarray(w["fc_pref"], np.float64),
+                    bc_pref=np.asarray(w["bc_pref"], np.float64))
+            for k, pair in state.get("consensus", ()):
+                d, mk = pair
+                self._consensus[_key_from_json(k)] = \
+                    (_decision_from_json(d), float(mk))
 
 
 class AsyncPlanner(Planner):

@@ -741,6 +741,7 @@ class FleetTrainer:
             "membership": self.membership.state_dict(),
             "detector": self.detector.state_dict(),
             "scheduler": self.scheduler.state_dict(),
+            "planner": self.planner.state_dict(),
             "next_fleet_event": self._next_fleet_event,
             "num_servers": self._num_servers,
             "plans": {str(w): _plan_to_lists(p)
@@ -805,6 +806,8 @@ class FleetTrainer:
         self.membership = FleetMembership.from_state(meta["membership"])
         self.detector.load_state_dict(meta["detector"])
         self.scheduler.load_state_dict(meta["scheduler"])
+        if meta.get("planner") is not None:
+            self.planner.load_state_dict(meta["planner"])
         self._stalled = set(meta["stalled"])
         self._true_factor = {int(w): f
                              for w, f in meta["true_factor"].items()}

@@ -32,6 +32,12 @@ their asynchronous form):
   engine: ``--fleet-schedule events.json`` scripts joins/leaves/failures/
   drift (a JSON list of fleet event dicts), each membership change
   re-plans every surviving worker and re-shards the server.
+* ``pipeline`` — stage-partitioned pipeline parallelism: ``--stages S``
+  contiguous stages balanced by profiled fc+bc, ``--microbatches M``
+  micro-batches per step under ``--pipeline-schedule`` (gpipe | 1f1b),
+  with inter-stage activations crossing each boundary as
+  DynaComm-scheduled segments (``--transfer-chunks`` splits each
+  micro-batch's boundary tensor for finer overlap).
 
 Examples::
 
@@ -55,8 +61,9 @@ import time
 
 from repro.configs import ARCHITECTURES
 from repro.runtime import (CompressionConfig, ExecutionConfig, FleetConfig,
-                           MeasureConfig, NetworkConfig, RuntimeConfig,
-                           ScheduleConfig, TopologyConfig, build_runtime)
+                           MeasureConfig, NetworkConfig, PipelineConfig,
+                           RuntimeConfig, ScheduleConfig, TopologyConfig,
+                           build_runtime)
 
 
 def config_from_flags(args) -> RuntimeConfig:
@@ -66,7 +73,7 @@ def config_from_flags(args) -> RuntimeConfig:
         name += "-async"
 
     network = topology = None
-    if name in ("zero", "dynamic"):
+    if name in ("zero", "dynamic", "pipeline"):
         # pass the shift through even for 'zero': RuntimeConfig owns the
         # "a drift needs the run-time loop" diagnostic
         network = NetworkConfig(
@@ -100,9 +107,21 @@ def config_from_flags(args) -> RuntimeConfig:
         fleet = FleetConfig(events=events,
                             workers_per_shard=args.workers_per_shard)
 
+    pipeline = None
+    stages = getattr(args, "stages", None)
+    microbatches = getattr(args, "microbatches", None)
+    if name == "pipeline":
+        pipeline = PipelineConfig(
+            stages=stages or 2, microbatches=microbatches or 2,
+            schedule=getattr(args, "pipeline_schedule", "1f1b"),
+            chunks=getattr(args, "transfer_chunks", 1))
+    elif stages is not None or microbatches is not None:
+        raise SystemExit("--stages/--microbatches configure the pipeline "
+                         "runtime; add --runtime pipeline")
+
     return RuntimeConfig(
         runtime=name, arch=args.arch, reduced=args.reduced,
-        fleet=fleet,
+        fleet=fleet, pipeline=pipeline,
         batch=args.batch, seq=args.seq,
         optimizer=args.optimizer, lr=args.lr,
         schedule=ScheduleConfig(
@@ -181,7 +200,7 @@ def main() -> None:
     ap.add_argument("--runtime",
                     choices=("local", "zero", "dynamic", "ps", "ps-async",
                              "dynamic-ps", "dynamic-ps-async",
-                             "fleet-async"),
+                             "fleet-async", "pipeline"),
                     default="local",
                     help="registry name; --staleness k still upgrades "
                          "ps/dynamic-ps to their -async form")
@@ -240,6 +259,20 @@ def main() -> None:
                          "fleet size (0 keeps --ps-servers fixed)")
     ap.add_argument("--worker-flops", type=float, default=1e10,
                     help="edge-worker compute rate fed to the profiler")
+    # pipeline knobs (pipeline runtime)
+    ap.add_argument("--stages", type=int, default=None,
+                    help="pipeline: number of contiguous stages (DP-"
+                         "balanced by profiled fc+bc; default 2)")
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="pipeline: micro-batches per step (must divide "
+                         "--batch; default 2)")
+    ap.add_argument("--pipeline-schedule", choices=("gpipe", "1f1b"),
+                    default="1f1b",
+                    help="pipeline: micro-batch order (GPipe fill/drain "
+                         "or PipeDream-flush 1F1B)")
+    ap.add_argument("--transfer-chunks", type=int, default=1,
+                    help="pipeline: boundary-tensor chunks per micro-batch "
+                         "for DynaComm-segmented activation transfers")
     ap.add_argument("--compress", choices=("none", "int8", "topk"),
                     default="none",
                     help="ps runtimes: compress gradient pushes (int8 "
@@ -289,6 +322,10 @@ def main() -> None:
         spec += f", fleet events {len(config.fleet.events)}" \
             if config.fleet.events else \
             f", fleet churn {config.fleet.churn}/s"
+    if config.runtime == "pipeline":
+        spec += (f", S={config.pipeline.stages} "
+                 f"M={config.pipeline.microbatches} "
+                 f"({config.pipeline.schedule})")
     print(spec)
 
     t0 = time.perf_counter()

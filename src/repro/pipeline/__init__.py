@@ -1,0 +1,47 @@
+"""repro.pipeline: stage-partitioned pipeline-parallel training.
+
+The DynaComm treatment of pipeline parallelism: stages come from the
+same family of DPs as the paper's transmission schedules
+(:func:`repro.core.dp.dp_partition`), micro-batch orders are explicit
+deterministic event streams (:mod:`repro.pipeline.schedule`), and the
+inter-stage activation traffic is scheduled through the *existing*
+push/pull cost model — each boundary is a virtual layer stack that
+``dp_forward``/``dp_backward`` segment to overlap with stage compute
+(:mod:`repro.pipeline.transfer`).  :class:`PipelineTrainer` executes the
+result with per-stage jitted applies and losses bit-identical to the
+single-device reference.
+"""
+
+from repro.pipeline.partition import (StagePartition, partition_loads,
+                                      partition_profiles)
+from repro.pipeline.schedule import (BACKWARD, FORWARD, SCHEDULES,
+                                     PipelineSchedule, PipelineTimeline,
+                                     StageTask, analytic_bubble_fraction,
+                                     gpipe_schedule, make_schedule,
+                                     one_f_one_b_schedule, simulate)
+from repro.pipeline.trainer import EMBED_LINK, PipelineTrainer
+from repro.pipeline.transfer import (TransferPlan, boundary_costs,
+                                     plan_boundary, whole_tensor_decision)
+
+__all__ = [
+    "BACKWARD",
+    "EMBED_LINK",
+    "FORWARD",
+    "PipelineSchedule",
+    "PipelineTimeline",
+    "PipelineTrainer",
+    "SCHEDULES",
+    "StagePartition",
+    "StageTask",
+    "TransferPlan",
+    "analytic_bubble_fraction",
+    "boundary_costs",
+    "gpipe_schedule",
+    "make_schedule",
+    "one_f_one_b_schedule",
+    "partition_loads",
+    "partition_profiles",
+    "plan_boundary",
+    "simulate",
+    "whole_tensor_decision",
+]

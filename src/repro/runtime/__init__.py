@@ -20,8 +20,8 @@ from repro.runtime.config import (DYNAMIC_RUNTIMES, RUNTIME_REGIMES,
                                   CompressionConfig, ExecutionConfig,
                                   FleetConfig, FleetEventConfig,
                                   MeasureConfig, NetworkConfig,
-                                  RuntimeConfig, ScheduleConfig,
-                                  TopologyConfig)
+                                  PipelineConfig, RuntimeConfig,
+                                  ScheduleConfig, TopologyConfig)
 from repro.runtime.protocol import EvalEvent, Trainer
 from repro.runtime.replan import (PlanStepCache, ReplanMixin,
                                   RescheduleEvent, hlo_collective_counts,
@@ -30,7 +30,7 @@ from repro.runtime.replan import (PlanStepCache, ReplanMixin,
 __all__ = [
     "RuntimeConfig", "ScheduleConfig", "ExecutionConfig", "MeasureConfig",
     "NetworkConfig", "TopologyConfig", "CompressionConfig",
-    "FleetConfig", "FleetEventConfig",
+    "FleetConfig", "FleetEventConfig", "PipelineConfig",
     "RUNTIME_REGIMES", "DYNAMIC_RUNTIMES",
     "Trainer", "EvalEvent",
     "PlanStepCache", "RescheduleEvent", "ReplanMixin",

@@ -727,3 +727,63 @@ class FleetRuntime(_AsyncBase):
         self._started = True
         log = self.trainer.log
         self._reported = len(log.accepted) if log is not None else 0
+
+
+@register_runtime("pipeline",
+                  description="stage-partitioned pipeline parallelism with "
+                              "DynaComm-scheduled activation transfers")
+class PipelineRuntime(_CompiledRuntime):
+    """Profile → DP stage partition → micro-batch pipeline execution.
+
+    Stages are balanced by profiled fc + bc via
+    :func:`repro.pipeline.partition_profiles`; inter-stage activation
+    traffic is planned through the shared edge cost model
+    (``dp_forward``/``dp_backward`` over virtual boundary layers) riding a
+    :class:`~repro.core.planner.Planner`, so homogeneous boundaries are
+    one DP solve plus cache hits.  Losses are bit-identical to the
+    single-stage execution of the same decomposition at any stage count.
+    """
+
+    def __init__(self, config, arch, batch_fn):
+        super().__init__(config, arch, batch_fn)
+        from repro.core import costs_from_profiles
+        from repro.core.planner import Planner
+        from repro.models.profiles import layer_profiles
+        from repro.pipeline import PipelineTrainer, partition_profiles
+        pcfg = config.pipeline        # materialized by RuntimeConfig
+        net = (config.schedule.network or NetworkConfig()).build()
+        profiles = layer_profiles(arch, self.shape)
+        partition = partition_profiles(
+            profiles, pcfg.stages,
+            compute_flops_per_s=config.measure.compute_flops_per_s)
+        self._costs = costs_from_profiles(
+            profiles, net=net,
+            compute_flops_per_s=config.measure.compute_flops_per_s)
+        self.planner = Planner(cache_size=config.schedule.plan_cache_size)
+        self.trainer = PipelineTrainer(
+            cfg=arch, optimizer=config.build_optimizer(),
+            num_stages=pcfg.stages, num_microbatches=pcfg.microbatches,
+            schedule_name=pcfg.schedule, aux_weight=config.aux_weight,
+            partition=partition, planner=self.planner,
+            transfer_strategy=config.schedule.strategy,
+            costs=self._costs, net=net, transfer_chunks=pcfg.chunks)
+        self._state = self.trainer.init_state(
+            jax.random.PRNGKey(config.seed))
+
+    @property
+    def partition(self):
+        return self.trainer.partition
+
+    def step(self, batch) -> float:
+        self._state, loss = self.trainer.step(self._state, batch)
+        self._data_idx += 1
+        return float(loss)
+
+    @property
+    def ledger(self) -> Dict[str, Any]:
+        led = dict(self.trainer.ledger)
+        led["push_compression_ratio"] = 1.0   # activations stay fp32
+        return led
+
+    def timeline(self):
+        return self.trainer.timeline()

@@ -39,6 +39,7 @@ RUNTIME_REGIMES = {
     "ps-async": "ps-async",
     "dynamic-ps-async": "ps-async",
     "fleet-async": "ps-async",
+    "pipeline": "pipeline",
 }
 DYNAMIC_RUNTIMES = ("dynamic", "dynamic-ps", "dynamic-ps-async",
                     "fleet-async")
@@ -142,6 +143,36 @@ class TopologyConfig:
             return base
         return uplink_degradation(base, factor=self.up_shift_factor,
                                   at_epoch=self.shift_epoch)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Stage-partitioned pipeline execution (``repro.pipeline``).
+
+    ``stages`` contiguous stages balanced by profiled fc + bc, ``schedule``
+    micro-batch order (``gpipe`` fill/drain or ``1f1b`` PipeDream-flush),
+    and ``chunks`` boundary-tensor chunks per micro-batch for the
+    DynaComm-segmented activation transfers (1 ⇒ segment only across
+    micro-batches).
+    """
+
+    stages: int = 2
+    microbatches: int = 2
+    schedule: str = "1f1b"
+    chunks: int = 1
+
+    def __post_init__(self):
+        from repro.pipeline.schedule import SCHEDULES
+        if self.stages < 1:
+            raise ValueError(f"stages must be >= 1, got {self.stages}")
+        if self.microbatches < 1:
+            raise ValueError(f"microbatches must be >= 1, got "
+                             f"{self.microbatches}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown pipeline schedule {self.schedule!r}; "
+                             f"choose from {list(SCHEDULES)}")
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -426,6 +457,7 @@ class RuntimeConfig:
     compression: CompressionConfig = dataclasses.field(
         default_factory=CompressionConfig)
     fleet: Optional[FleetConfig] = None
+    pipeline: Optional[PipelineConfig] = None
 
     def __post_init__(self):
         if self.runtime not in RUNTIME_REGIMES:
@@ -455,7 +487,8 @@ class RuntimeConfig:
             if self.execution.aggregate:
                 raise ValueError("aggregate=True is a ps-async knob; "
                                  f"runtime {self.runtime!r} is synchronous")
-        if regime in ("zero", "local") and self.schedule.topology is not None:
+        if regime in ("zero", "local", "pipeline") and \
+                self.schedule.topology is not None:
             raise ValueError(f"runtime {self.runtime!r} plans against a "
                              f"scalar network, not a PS topology — drop "
                              f"schedule.topology or pick a ps-* runtime")
@@ -464,11 +497,13 @@ class RuntimeConfig:
                              f"topology, not a scalar network — drop "
                              f"schedule.network or pick a zero/dynamic "
                              f"runtime")
-        if self.runtime == "zero" and self.schedule.network is not None \
+        if self.runtime in ("zero", "pipeline") and \
+                self.schedule.network is not None \
                 and self.schedule.network.shift_gbps is not None:
             raise ValueError("a bandwidth shift needs the run-time loop to "
                              "react to it — use runtime='dynamic' (the "
-                             "'zero' runtime plans once at startup)")
+                             f"{self.runtime!r} runtime plans once at "
+                             f"startup)")
         if self.runtime in ("ps", "ps-async") and \
                 self.schedule.topology is not None and \
                 self.schedule.topology.up_shift_factor is not None:
@@ -480,6 +515,17 @@ class RuntimeConfig:
             raise ValueError(f"the fleet block configures the elastic "
                              f"'fleet-async' runtime (got runtime "
                              f"{self.runtime!r})")
+        if self.pipeline is not None and self.runtime != "pipeline":
+            raise ValueError(f"the pipeline block configures the "
+                             f"'pipeline' runtime (got runtime "
+                             f"{self.runtime!r})")
+        if self.runtime == "pipeline":
+            if self.pipeline is None:
+                object.__setattr__(self, "pipeline", PipelineConfig())
+            if self.batch % self.pipeline.microbatches:
+                raise ValueError(
+                    f"batch={self.batch} is not divisible by "
+                    f"pipeline.microbatches={self.pipeline.microbatches}")
         if self.runtime == "fleet-async":
             if self.execution.aggregate:
                 raise ValueError("aggregate=True needs fixed full-fleet "
@@ -558,6 +604,7 @@ class RuntimeConfig:
         sub("compression", CompressionConfig)
         sub("fleet", FleetConfig)    # nested event dicts handled by its
                                      # __post_init__
+        sub("pipeline", PipelineConfig)
         unknown = set(obj) - {f.name for f in dataclasses.fields(cls)}
         if unknown:
             raise ValueError(f"unknown RuntimeConfig fields "

@@ -267,6 +267,9 @@ class ReplanMixin:
             "events": self._events_to_obj(self.events),
             "measured_epoch": self._measured_epoch,
         }
+        planner = getattr(self, "planner", None)
+        if planner is not None:
+            meta["planner"] = planner.state_dict()
         if extra_meta:
             meta.update(extra_meta)
         state = {"step_idx": np.asarray(self._step_idx, np.int64),
@@ -302,6 +305,9 @@ class ReplanMixin:
             self._measured_fc_bc = (np.asarray(tree["measured_fc"]),
                                     np.asarray(tree["measured_bc"]))
         self.events = self._events_from_obj(meta["events"])
+        planner = getattr(self, "planner", None)
+        if planner is not None and meta.get("planner") is not None:
+            planner.load_state_dict(meta["planner"])
         self._step_fn = None       # recompiled lazily on the next step
         self._costs = None
         return meta

@@ -1,0 +1,115 @@
+"""Subprocess helper: multi-device checks for the pipeline trainer.
+
+Run with 4 forged host devices (XLA_FLAGS set here, before jax imports).
+Prints one JSON line the parent asserts on.  Checks:
+
+1. stage isolation — each stage's compiled forward/backward program
+   contains zero cross-device collectives (boundary traffic is explicit
+   host-mediated buffer hand-off, never a hidden all-reduce);
+2. exactness — losses are bit-identical across stage counts S in
+   {1, 2, 4} at fixed micro-batching (the S=1 run *is* the single-device
+   execution of the same decomposition), with S=4 placed on 4 distinct
+   forged devices;
+3. single-device reference — pipeline losses match the fused
+   ``jax.value_and_grad(train_loss)`` step to fp32 roundoff;
+4. ledger audit — boundary pulls/pushes counted exactly:
+   per step, M activations per boundary forward, M activation grads per
+   boundary backward, one tied-embedding broadcast and M embedding-grad
+   returns when the head lives off the embedding stage.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import collective_counts
+from repro.configs import get_config
+from repro.models import init_params, train_loss
+from repro.optim import adamw
+from repro.pipeline import PipelineTrainer
+
+STEPS = 3
+
+
+def run(cfg, batch, S, M, devices=None):
+    tr = PipelineTrainer(cfg=cfg, optimizer=adamw(1e-3), num_stages=S,
+                         num_microbatches=M, stage_devices=devices)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    losses = []
+    for _ in range(STEPS):
+        state, loss = tr.step(state, batch)
+        losses.append(float(loss))
+    return tr, losses
+
+
+def main():
+    cfg = get_config("granite-3-2b").reduced()
+    B, T = 8, 32
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    devices = jax.devices()
+
+    out = {"num_devices": len(devices), "losses": {}}
+    trainers = {}
+    for M in (1, 4):
+        for S in (1, 2, 4):
+            devs = devices[:S] if S == 4 else None
+            tr, losses = run(cfg, batch, S, M, devices=devs)
+            trainers[(S, M)] = tr
+            out["losses"][f"S{S}M{M}"] = losses
+
+    # per-stage collective audit on the 4-stage 4-device trainer
+    tr4 = trainers[(4, 4)]
+    stage_collectives = []
+    for fwd_hlo, bwd_hlo in tr4.stage_hlo(batch):
+        cf = collective_counts(fwd_hlo)
+        cb = collective_counts(bwd_hlo)
+        stage_collectives.append(
+            {"fwd": sum(cf.values()), "bwd": sum(cb.values())})
+    out["stage_collectives"] = stage_collectives
+
+    # ledger audit: S=4, M=4, STEPS steps, 3 boundaries, tied embed split
+    act_bytes = tr4.activation_bytes()
+    led = tr4.ledger
+    M, nb = 4, len(act_bytes)
+    embed_bytes = tr4.specs[0].total * 4
+    out["ledger"] = {
+        "num_pulls": led["num_pulls"],
+        "expected_pulls": STEPS * (M * nb + 1),
+        "num_pushes": led["num_pushes"],
+        "expected_pushes": STEPS * (M * nb + M),
+        "pull_bytes": led["pull_bytes"],
+        "expected_pull_bytes": STEPS * (M * sum(act_bytes) + embed_bytes),
+        "push_bytes": led["push_bytes"],
+        "expected_push_bytes": STEPS * (M * sum(act_bytes)
+                                        + M * embed_bytes),
+    }
+
+    # single-device fused reference (same init, optimizer, aux weight)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    ostate = opt.init(params)
+
+    @jax.jit
+    def ref_step(params, ostate, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(cfg, p, batch, aux_weight=0.01))(params)
+        params, ostate = opt.update(grads, ostate, params)
+        return params, ostate, loss
+
+    ref_losses = []
+    for _ in range(STEPS):
+        params, ostate, loss = ref_step(params, ostate, batch)
+        ref_losses.append(float(loss))
+    out["reference_losses"] = ref_losses
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

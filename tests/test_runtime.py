@@ -255,7 +255,8 @@ class TestRegistry:
     def test_all_runtimes_registered(self):
         assert runtime_names() == ("dynamic", "dynamic-ps",
                                    "dynamic-ps-async", "fleet-async",
-                                   "local", "ps", "ps-async", "zero")
+                                   "local", "pipeline", "ps", "ps-async",
+                                   "zero")
 
     def test_register_unknown_name_rejected(self):
         from repro.runtime.registry import register_runtime
